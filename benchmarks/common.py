@@ -1,0 +1,44 @@
+"""Shared benchmark utilities."""
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def time_call(fn, *args, warmup=1, iters=3):
+    """Median wall time of fn(*args) in seconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def load_dryrun(name="dryrun_full.json"):
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def find_result(data, arch, shape, multi_pod=False):
+    if not data:
+        return None
+    for r in data.get("results", []):
+        if (r["arch"] == arch and r["shape"] == shape
+                and r["multi_pod"] == multi_pod):
+            return r
+    return None
+
+
+def row(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,60 @@
+"""Paper Table: HyperShard declarative programming — parallelization of a
+new algorithm < 1 day, strategy re-tuning days -> hours.
+
+Proxy metrics we can actually measure:
+  - strategy derivation LATENCY: deriving the full parallel strategy for
+    every parameter of every assigned arch (the thing the paper says takes
+    engineers 1-2 weeks manually) is a sub-second formal derivation here;
+  - declaration SIZE: lines of parallel-strategy declaration per model
+    (the rule table) vs parameters covered — the decoupling ratio;
+  - strategy PORTABILITY: the same declaration derives valid strategies on
+    three different device matrices with zero model-code change.
+"""
+import inspect
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro.configs.base import get_config, list_archs
+from repro.core import hypershard
+from repro.core.layout import Layout
+from repro.models import model as M
+
+LAYOUTS = [
+    Layout((16, 16), ("data", "model")),
+    Layout((2, 16, 16), ("pod", "data", "model")),
+    Layout((8, 4), ("data", "model")),
+]
+
+
+def run():
+    plan = hypershard.ShardingPlan()
+    n_params = 0
+    t0 = time.perf_counter()
+    for arch in list_archs():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda c=cfg: M.init_model(
+            c, jax.random.PRNGKey(0)))
+        paths, leaves, _ = hypershard.tree_paths(shapes)
+        for layout in LAYOUTS:
+            for p, l in zip(paths, leaves):
+                s = hypershard.param_strategy(p, tuple(l.shape), layout, plan)
+                assert s.divisible(l.shape)
+        n_params += len(paths)
+    dt = time.perf_counter() - t0
+
+    rule_lines = len(hypershard._RULES) + len(hypershard._MOE_RULES)
+    row("hypershard.derivation_all_archs", dt * 1e6,
+        f"{n_params} params x {len(LAYOUTS)} meshes in {dt:.2f}s "
+        f"(paper: 1-2 weeks manual per adaptation)")
+    row("hypershard.declaration_size", 0.0,
+        f"{rule_lines} declarative rules cover {n_params} tensors across "
+        f"{len(list_archs())} archs ({n_params // rule_lines}x leverage)")
+    row("hypershard.portability", 0.0,
+        f"same declaration valid on {len(LAYOUTS)} device matrices")
+    return {"derivation_s": dt, "params": n_params}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle on CPU.
+
+On this CPU container the interpret-mode numbers are NOT TPU performance —
+they validate the kernels run and give the ref-path baseline the dry-run
+lowers.  Derived column reports the analytic TPU roofline time for each
+kernel's production shape.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core import topology
+from repro.kernels import ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # flash attention: production-ish tile
+    B, S, H, KV, D = 1, 2048, 8, 8, 128
+    ks = jax.random.split(key, 3)
+    q = (jax.random.normal(ks[0], (B, S, H, D)) * 0.3).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (B, S, KV, D)) * 0.3).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (B, S, KV, D)) * 0.3).astype(jnp.bfloat16)
+    t = time_call(jax.jit(lambda q, k, v: ref.flash_attention(q, k, v)), q, k, v)
+    flops = 4 * B * S * S * H * D / 2        # causal
+    row("kernels.flash_ref_cpu", t * 1e6,
+        f"TPU roofline {flops/topology.PEAK_FLOPS_BF16*1e6:.1f}us")
+
+    # ssd scan
+    B2, S2, Hh, P, N = 2, 2048, 16, 64, 128
+    ks = jax.random.split(key, 5)
+    x = (jax.random.normal(ks[0], (B2, S2, Hh, P)) * 0.3).astype(jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B2, S2, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B2, S2, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B2, S2, N)) * 0.3
+    t = time_call(jax.jit(lambda *a: ref.ssd_scan(*a, chunk=128)[0]),
+                  x, dt, A, Bm, Cm)
+    row("kernels.ssd_ref_cpu", t * 1e6, f"B{B2} S{S2} H{Hh} chunked")
+
+    # grouped matmul
+    T, Dd, F, E = 4096, 512, 1024, 16
+    ks = jax.random.split(key, 2)
+    xg = (jax.random.normal(ks[0], (T, Dd)) * 0.3).astype(jnp.bfloat16)
+    w = (jax.random.normal(ks[1], (E, Dd, F)) * 0.3).astype(jnp.bfloat16)
+    sizes = jnp.full((E,), T // E, jnp.int32)
+    t = time_call(jax.jit(ref.grouped_matmul), xg, w, sizes)
+    gf = 2 * T * Dd * F
+    row("kernels.gmm_ref_cpu", t * 1e6,
+        f"TPU roofline {gf/topology.PEAK_FLOPS_BF16*1e6:.1f}us")
+    return {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Merge dry-run JSONs: later files override earlier per (arch, shape, mesh).
+
+    PYTHONPATH=src:. python -m benchmarks.merge_results out.json in1.json in2.json ...
+"""
+import json
+import sys
+
+
+def merge(paths):
+    by_key = {}
+    failures = []
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        for r in d.get("results", []):
+            by_key[(r["arch"], r["shape"], r["multi_pod"])] = r
+        failures = [x for x in d.get("failures", [])
+                    if not any(x["pair"].startswith(f"{a} x {s} ")
+                               for (a, s, _) in by_key)]
+    return {"results": sorted(by_key.values(),
+                              key=lambda r: (r["arch"], r["shape"],
+                                             r["multi_pod"])),
+            "failures": failures}
+
+
+if __name__ == "__main__":
+    out, *ins = sys.argv[1:]
+    merged = merge(ins)
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=1)
+    print(f"{len(merged['results'])} results, {len(merged['failures'])} "
+          f"failures -> {out}")

@@ -1,0 +1,66 @@
+"""Paper Table: HyperMPMD inter-sub-model concurrency — removes the 10-40%
+pipeline bubbles of omni-modal models (+~15% training performance).
+
+ANALYTIC: internvl2-26b as the omni-modal case: vision encoder + LLM
+backbone with heterogeneous loads.  SPMD runs every device through both
+modules serially with the load imbalance exposed; HyperMPMD assigns each
+submodule a proportional process group and pipelines microbatches
+(``repro.core.mpmd`` model).
+
+MEASURED: single-controller async dispatch of two submodule programs via
+MPMDScheduler (CPU; correctness of the scheduling machinery).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core import mpmd
+
+
+def analytic():
+    # module times normalised: ViT-6B ~ 0.45, projector 0.05, LLM-20B ~ 1.0
+    # on equal-size groups; imbalance -> bubbles in lockstep SPMD+PP.
+    times = [0.45, 0.05, 1.0]
+    n_micro = 8
+    spmd = mpmd.spmd_step_time(times)                 # 1.50
+    # SPMD+PP bubbles: fill/drain (S-1)/(M+S-1) plus imbalance losses
+    S = len(times)
+    fill_drain = (S - 1) / (n_micro + S - 1)
+    imbalance = mpmd.pipeline_bubble_fraction(times, n_micro)
+    mp = mpmd.mpmd_step_time(times, n_micro)
+    gain = (spmd - mp) / spmd * 100
+    return spmd, mp, (fill_drain, imbalance), gain
+
+
+def measured():
+    groups = mpmd.groups_from_mapping({"vision": 1})
+    groups["text"] = groups["vision"]                 # 1 CPU device: colocate
+    sched = mpmd.MPMDScheduler(groups)
+    fv = jax.jit(lambda x: jnp.tanh(x @ x.T).sum())
+    ft = jax.jit(lambda x: (x @ x.T).sum())
+    x = jnp.ones((256, 256))
+
+    def both():
+        t1 = sched.submit("vision", fv, x)
+        t2 = sched.submit("text", ft, x)
+        sched.wait(t1, t2)
+
+    return time_call(both)
+
+
+def run():
+    spmd, mp, (fill_drain, imbalance), gain = analytic()
+    t = measured()
+    row("mpmd_bubbles.spmd_step", 0.0, f"normalized step={spmd:.2f}")
+    row("mpmd_bubbles.mpmd_step", 0.0,
+        f"normalized step={mp:.2f} gain={gain:.0f}% "
+        f"(paper: ~15% from removing 10-40% bubbles)")
+    row("mpmd_bubbles.bubble_fraction", 0.0,
+        f"fill/drain={fill_drain*100:.0f}%, with-imbalance="
+        f"{imbalance*100:.0f}% (paper range 10-40%)")
+    row("mpmd_bubbles.scheduler_roundtrip", t * 1e6, "2-group async dispatch")
+    return {"gain_pct": gain, "bubble": imbalance}
+
+
+if __name__ == "__main__":
+    run()

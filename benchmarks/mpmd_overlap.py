@@ -1,0 +1,69 @@
+"""Paper Table: HyperMPMD intra-card concurrency — MoE comm masking 60% -> 90%.
+
+ANALYTIC: masking ratio of the MoE all-to-all under (a) the monolithic
+schedule (paper baseline: ~60% masked by coarse double-buffering) vs (b)
+the chunked schedule where per-chunk transfers hide behind expert matmuls
+(``repro.core.overlap.overlap_efficiency``).  Compute/comm times come from
+the deepseek-v2-lite dry-run artifact when available, else from the
+first-order model.
+
+MEASURED: the chunked-collective machinery actually running —
+``collective_matmul_allgather`` on a multi-device subprocess is exercised
+in tests; here we time the GShard vs ragged dispatch on CPU.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import find_result, load_dryrun, row, time_call
+from repro.configs.base import get_config
+from repro.core import topology
+from repro.core.overlap import overlap_efficiency
+from repro.models import moe as moe_mod
+
+
+def analytic():
+    data = load_dryrun()
+    r = find_result(data, "deepseek-v2-lite-16b", "train_4k")
+    if r:
+        # the paper's masking ratio is EP all-to-all vs the expert compute
+        # it can hide behind (not the whole step)
+        comm = r["per_device"]["collective_by_kind"].get("all-to-all", 0.0)
+        comm_s = comm / topology.ICI_BW_PER_LINK
+        comp_s = 0.5 * r["per_device"]["flops"] / topology.PEAK_FLOPS_BF16
+        src = "dry-run artifact (a2a vs MoE-share compute)"
+    else:
+        cfg = get_config("deepseek-v2-lite-16b")
+        tokens = 4096 * 256 / 256
+        comm_s = tokens * cfg.d_model * 2 * 2 * cfg.num_layers \
+            / topology.ICI_BW_PER_LINK
+        comp_s = 8 * cfg.active_param_count() * tokens * 256 / 256 \
+            / topology.PEAK_FLOPS_BF16
+        src = "first-order model"
+    base = overlap_efficiency(comp_s, comm_s, 1, masking_floor=0.60)
+    ours = overlap_efficiency(comp_s, comm_s, 8)
+    return base, ours, src
+
+
+def measured():
+    cfg = get_config("deepseek-moe-16b").reduced()
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jnp.ones((2, 64, cfg.d_model), jnp.bfloat16)
+    g = jax.jit(lambda p, x: moe_mod.moe_forward(p, x, cfg, dispatch="gshard")[0])
+    r = jax.jit(lambda p, x: moe_mod.moe_forward(p, x, cfg, dispatch="ragged")[0])
+    return time_call(g, p, x), time_call(r, p, x)
+
+
+def run():
+    base, ours, src = analytic()
+    tg, tr = measured()
+    row("mpmd_overlap.masking_monolithic", 0.0,
+        f"masking={base*100:.0f}% ({src}; paper baseline 60%)")
+    row("mpmd_overlap.masking_chunked8", 0.0,
+        f"masking={ours*100:.0f}% (paper target 90%)")
+    row("mpmd_overlap.gshard_dispatch_cpu", tg * 1e6, "reduced cfg fwd")
+    row("mpmd_overlap.ragged_dispatch_cpu", tr * 1e6, "reduced cfg fwd")
+    return {"masking_base": base, "masking_ours": ours}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Paper Table: HyperMPMD cross-model scheduling — RL actor/learner
+co-scheduling lifts cluster utilization ~15%.
+
+ANALYTIC: discrete-event simulation of a sample-evaluate-update RL loop on
+a 16-group supernode slice: (a) time-sliced SPMD (whole cluster alternates
+rollout and update phases; stragglers stall the phase barrier) vs (b)
+MPMD groups (actors stream rollouts; learner updates as batches arrive —
+single-controller dynamic scheduling).  Rollout lengths are heavy-tailed
+(the straggler effect the paper targets).
+"""
+import numpy as np
+
+from benchmarks.common import row
+
+
+def simulate_with(n_actors=12, n_learner=4, n_rollouts=480, seed=0,
+                  sigma=0.6):
+    rng = np.random.default_rng(seed)
+    # rollout durations (lognormal generation lengths)
+    dur = rng.lognormal(mean=0.0, sigma=sigma, size=n_rollouts)
+    update_t = 0.06 * n_actors / n_learner    # learner work per batch
+    batch = n_actors
+
+    # (a) phase-barrier SPMD: all devices do rollouts in waves (barrier at
+    # each wave = max of the wave), then all devices update.
+    waves = dur.reshape(-1, n_actors)
+    t_rollout = waves.max(axis=1).sum()
+    t_update = update_t * len(waves) * (n_actors + n_learner) / (n_actors + n_learner)
+    spmd_time = t_rollout + update_t * len(waves)
+    busy = dur.sum() + update_t * len(waves) * n_learner / (n_actors + n_learner) * (n_actors + n_learner)
+    spmd_util = (dur.sum() + update_t * len(waves)) / \
+        (spmd_time * (n_actors + n_learner)) * (n_actors + n_learner) / (n_actors + n_learner)
+    spmd_util = (dur.sum() + update_t * len(waves) * n_learner) / \
+        (spmd_time * (n_actors + n_learner))
+
+    # (b) MPMD: actors run continuously; learner consumes asynchronously.
+    actor_end = np.zeros(n_actors)
+    for d in dur:
+        i = actor_end.argmin()
+        actor_end[i] += d
+    t_actors = actor_end.max()
+    t_learner = update_t * len(waves)
+    mpmd_time = max(t_actors, t_learner)
+    mpmd_util = (dur.sum() + t_learner * n_learner) / \
+        (mpmd_time * (n_actors + n_learner))
+    return spmd_time, mpmd_time, spmd_util, mpmd_util
+
+
+def run():
+    # moderate stragglers (the paper's production regime)
+    sp_t, mp_t, sp_u, mp_u = simulate_sigma(0.15)
+    lift_m = (mp_u - sp_u) / sp_u * 100
+    row("mpmd_rl.moderate_stragglers", 0.0,
+        f"util {sp_u*100:.0f}%->{mp_u*100:.0f}% lift={lift_m:.0f}% "
+        f"(paper: +15% — its baseline already overlaps partially; our "
+        f"phase-barrier baseline is stricter, so this is an upper band)")
+    # heavy-tailed rollouts (agentic generation)
+    sp_t, mp_t, sp_u, mp_u = simulate_sigma(0.6)
+    lift_h = (mp_u - sp_u) / sp_u * 100
+    row("mpmd_rl.heavy_tail_stragglers", 0.0,
+        f"util {sp_u*100:.0f}%->{mp_u*100:.0f}% lift={lift_h:.0f}% "
+        f"(agentic regime: barrier losses compound)")
+    return {"lift_moderate": lift_m, "lift_heavy": lift_h}
+
+
+def simulate_sigma(sigma):
+    return simulate_with(sigma=sigma)
+
+
+if __name__ == "__main__":
+    run()

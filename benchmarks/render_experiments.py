@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dryrun JSON.
+
+    PYTHONPATH=src:. python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+import json
+import sys
+
+from benchmarks.common import load_dryrun
+from repro.configs.base import SHAPES, get_config
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def render(data):
+    out = []
+    results = data["results"]
+    out.append("### Baseline roofline table (single-pod v5e-256, per-device "
+               "terms)\n")
+    out.append("| arch | shape | compute_s | memory_s | collective_s | "
+               "bound | useful | peak GiB | fits |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted([r for r in results if not r["multi_pod"]],
+                    key=lambda r: (r["arch"], list(SHAPES).index(r["shape"]))):
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio") or 0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4g} | "
+            f"{t['memory_s']:.4g} | {t['collective_s']:.4g} | "
+            f"**{t['dominant']}** | {u:.3f} | "
+            f"{gib(r['per_device']['peak_memory_bytes'])} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+
+    out.append("\n### Multi-pod dry-run (v5e 2x256, (pod,data,model)=(2,16,16))\n")
+    out.append("| arch | shape | compile_s | coll GB/dev | peak GiB | bound |")
+    out.append("|---|---|---|---|---|---|")
+    for r in sorted([r for r in results if r["multi_pod"]],
+                    key=lambda r: (r["arch"], list(SHAPES).index(r["shape"]))):
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} | "
+            f"{r['per_device']['collective_bytes']/1e9:.2f} | "
+            f"{gib(r['per_device']['peak_memory_bytes'])} | {t['dominant']} |")
+
+    out.append("\n### Collective mix (single-pod, GB/device/step)\n")
+    out.append("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+               "all-to-all | permute |")
+    out.append("|---|---|---|---|---|---|---|")
+    for r in sorted([r for r in results if not r["multi_pod"]],
+                    key=lambda r: (r["arch"], list(SHAPES).index(r["shape"]))):
+        bk = r["per_device"]["collective_by_kind"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{bk.get('all-gather', 0)/1e9:.2f} | "
+            f"{bk.get('all-reduce', 0)/1e9:.2f} | "
+            f"{bk.get('reduce-scatter', 0)/1e9:.2f} | "
+            f"{bk.get('all-to-all', 0)/1e9:.2f} | "
+            f"{bk.get('collective-permute', 0)/1e9:.2f} |")
+
+    fails = data.get("failures", [])
+    out.append(f"\nFailures: {len(fails)}")
+    for f in fails:
+        out.append(f"- {f['pair']}: {f['error']}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    name = sys.argv[1] if len(sys.argv) > 1 else "dryrun_full.json"
+    print(render(load_dryrun(name)))

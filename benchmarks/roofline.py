@@ -1,0 +1,57 @@
+"""Roofline report (assignment deliverable g): per (arch x shape x mesh)
+compute/memory/collective terms from the compiled dry-run artifacts.
+
+Reads results/dryrun_full.json (produced by repro.launch.dryrun --both)
+and prints the full baseline table + dominant bottleneck + the
+MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+"""
+from benchmarks.common import load_dryrun, row
+from repro.configs.base import SHAPES, get_config
+from repro.core import topology
+
+
+def fmt_table(results):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':14s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'bound':>10s} "
+           f"{'useful':>7s} {'peakGiB':>8s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"],
+                                            r["multi_pod"])):
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:14s} "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['dominant']:>10s} "
+            f"{(u if u else 0):7.3f} "
+            f"{r['per_device']['peak_memory_bytes']/2**30:8.2f} "
+            f"{'y' if r['fits_hbm'] else 'N':>5s}")
+    return "\n".join(lines)
+
+
+def run():
+    data = load_dryrun()
+    if not data:
+        row("roofline.table", 0.0, "results/dryrun_full.json missing — run "
+            "PYTHONPATH=src python -m repro.launch.dryrun --both --out "
+            "results/dryrun_full.json")
+        return {}
+    results = data["results"]
+    print(fmt_table(results))
+    n1 = sum(1 for r in results if not r["multi_pod"])
+    n2 = sum(1 for r in results if r["multi_pod"])
+    dominant = {}
+    for r in results:
+        if not r["multi_pod"]:
+            dominant[r["roofline"]["dominant"]] = \
+                dominant.get(r["roofline"]["dominant"], 0) + 1
+    row("roofline.pairs_single_pod", 0.0, f"{n1}/40 lowered+compiled")
+    row("roofline.pairs_multi_pod", 0.0, f"{n2}/40 lowered+compiled")
+    row("roofline.bottleneck_histogram", 0.0, str(dominant))
+    fails = data.get("failures", [])
+    row("roofline.failures", 0.0, str(len(fails)))
+    return {"n_single": n1, "n_multi": n2, "failures": len(fails)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark driver: one section per paper table/claim + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (and the roofline table).
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (hypershard_derive, kernels_bench, mpmd_bubbles,
+                            mpmd_overlap, mpmd_rl, offload_serve,
+                            offload_train, roofline)
+    print("name,us_per_call,derived")
+    sections = [
+        ("offload_train (paper §3.2 training)", offload_train),
+        ("offload_serve (paper §3.2 inference)", offload_serve),
+        ("mpmd_overlap (paper §3.3a)", mpmd_overlap),
+        ("mpmd_bubbles (paper §3.3b)", mpmd_bubbles),
+        ("mpmd_rl (paper §3.3c)", mpmd_rl),
+        ("hypershard (paper §3.4)", hypershard_derive),
+        ("kernels", kernels_bench),
+        ("roofline (deliverable g)", roofline),
+    ]
+    failed = 0
+    for name, mod in sections:
+        print(f"# --- {name} ---")
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"# SECTION FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: train a small model end-to-end with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen2-0.5b] [--steps 30]
+
+Uses the reduced config so it runs on CPU in ~a minute; swap
+``--full`` on real hardware to train the exact assigned config.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ShapeConfig, get_config
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import GenerateConfig, Generator
+from repro.train.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("quickstart", 64, 4, "train")
+
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params reduced)")
+    params, hist = train(
+        cfg, shape,
+        train_cfg=TrainConfig(num_steps=args.steps, log_every=5),
+        adamw=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=args.steps),
+        hook=lambda m: print(f"  step {m['step']:4d} loss {m['loss']:.4f} "
+                             f"lr {m['lr']:.2e} ({m['wall_s']:.1f}s)"))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    import jax.numpy as jnp
+    gen = Generator(cfg, params, max_len=96)
+    out = gen.generate(jnp.ones((1, 8), jnp.int32),
+                       GenerateConfig(max_new_tokens=16))
+    print("sampled token ids:", out[0, 8:].tolist())
+
+
+if __name__ == "__main__":
+    main()

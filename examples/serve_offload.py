@@ -1,0 +1,62 @@
+"""HyperOffload serving: batched generation + hierarchical KV pool.
+
+    PYTHONPATH=src python examples/serve_offload.py
+
+1. Batched prefill+decode serving with the standard engine.
+2. The HyperOffload KV pool: decode attention over a cache whose cold
+   majority lives in host memory (the paper's 71K->123K mechanism),
+   verified against the flat-cache reference.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.kvcache import KVCachePool, KVPoolConfig
+from repro.kernels import ref
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+
+    # 1. batched serving
+    gen = Generator(cfg, params, max_len=128)
+    prompts = jnp.ones((4, 16), jnp.int32)
+    out = gen.generate(prompts, GenerateConfig(max_new_tokens=24,
+                                               temperature=0.8))
+    print(f"served batch of {out.shape[0]}: {out.shape[1]} tokens each")
+
+    # 2. hierarchical KV pool
+    pool = KVCachePool(cfg, batch=2, max_len=2048,
+                       pool=KVPoolConfig(hot_window=64, block=32))
+    KV, hd, H = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
+    key = jax.random.PRNGKey(1)
+    kts, vts = [], []
+    for t in range(300):
+        kt = jax.random.normal(jax.random.fold_in(key, 2 * t),
+                               (2, 1, KV, hd), jnp.float32) * 0.3
+        vt = jax.random.normal(jax.random.fold_in(key, 2 * t + 1),
+                               (2, 1, KV, hd), jnp.float32) * 0.3
+        pool.append(kt, vt)
+        kts.append(kt)
+        vts.append(vt)
+    q = jax.random.normal(jax.random.fold_in(key, 9999), (2, H, hd)) * 0.5
+    got = pool.attend(q)
+    want = ref.decode_attention(q[:, None], jnp.concatenate(kts, 1),
+                                jnp.concatenate(vts, 1),
+                                jnp.full((2,), 300, jnp.int32))[:, 0]
+    err = float(jnp.abs(got - want).max())
+    frac = pool.host_bytes() / (pool.host_bytes() + pool.hbm_bytes())
+    print(f"KV pool: 300-token context, {frac*100:.0f}% of cache on host, "
+          f"max err vs flat cache = {err:.2e}")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""HyperShard: declarative parallel-strategy derivation for whole models.
+
+Model code is written single-device (paper Fig. 5b); this module owns the
+entire parallel strategy.  A :class:`ShardingPlan` declares the *intent*
+(tensor-parallel axis, FSDP axes, offload targets); ``param_strategy``
+derives a :class:`~repro.core.layout.ShardStrategy` for every parameter
+from its tree path + shape, with automatic divisibility fallback (a dim
+that doesn't divide simply stays replicated, mirroring how the paper's
+formal derivation rejects invalid strategies).
+
+The same registry derives optimizer-state and KV-cache shardings, so one
+declaration covers train + serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.layout import Layout, ShardStrategy, layout_for_mesh
+
+Axes = Optional[Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Declarative intent, decoupled from model code (paper §3.4)."""
+    tp: Axes = ("model",)                  # tensor-parallel mesh axes
+    fsdp: Axes = ("pod", "data")           # ZeRO-3-ish parameter sharding axes
+    dp: Axes = ("pod", "data")             # batch axes
+    # MoE expert-weight placement: "ep" = experts over tp axis (expert
+    # parallelism, pairs with the GShard dispatch); "dp" = experts over the
+    # fsdp axes + expert-FFN dim over tp (pairs with dispatch="dp_local")
+    moe_weights: str = "ep"
+    # HyperOffload knobs (paper §3.2)
+    params_on_host: bool = False           # weights live in host memory
+    opt_state_on_host: bool = False        # optimizer states live in host memory
+    activation_offload: bool = False       # remat-offload layer residuals
+    # serving
+    kv_seq_axes: Axes = None               # shard cache sequence (flash-decode)
+
+    def replace(self, **kw) -> "ShardingPlan":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# rule table: (regex over tree path, role)
+# roles name the *last* dims of the parameter (leading stacked-layer dims are
+# automatically replicated).
+# ---------------------------------------------------------------------------
+_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    (r"embed$",                    ("vocab", "residual")),
+    (r"unembed$",                  ("vocab", "residual")),
+    (r"frontend_proj$",            ("none", "tp")),
+    (r"final_norm$|norm1$|norm2$|norm$|kv_norm$", ("none",)),
+    (r"(wq|wk|wv|w_dkv|w_x|w_gate|w_up|w_input_gate|w_a_gate|in_proj)$",
+                                   ("fsdp", "tp")),
+    (r"(wo|w_out|w_down|out_proj)$", ("tp", "fsdp")),
+    (r"(w_uk|w_uv)$",              ("fsdp", "tp")),
+    (r"(ws_gate|ws_up)$",          ("fsdp", "tp")),
+    (r"ws_down$",                  ("tp", "fsdp")),
+    (r"(bq|bk|bv)$",               ("tp",)),
+    (r"router$",                   ("none", "none")),
+    (r"ffn/(w_gate|w_up)$",        ("expert", "fsdp", "none")),   # MoE stacked
+    (r"ffn/w_down$",               ("expert", "none", "fsdp")),
+    (r"conv_w$",                   ("none", "none")),
+    (r"(A_log|D|dt_bias|lambda)$", ("none",)),
+)
+
+# MoE expert weights are 3D (E, D, F); they match the generic w_gate rule
+# first unless we check the expert rule earlier — order fixed below.
+_MOE_RULES = (
+    (r"ffn/(w_gate|w_up)$",        ("expert", "fsdp", "none")),
+    (r"ffn/w_down$",               ("expert", "none", "fsdp")),
+)
+
+_MOE_RULES_DP = (
+    (r"ffn/(w_gate|w_up)$",        ("fsdp", "none", "tp")),
+    (r"ffn/w_down$",               ("fsdp", "tp", "none")),
+)
+
+
+def _role_axes(role: str, plan: ShardingPlan) -> Axes:
+    if role == "tp":
+        return plan.tp
+    if role == "fsdp":
+        return plan.fsdp
+    if role == "vocab":
+        return plan.tp
+    if role == "expert":
+        return plan.tp                      # expert parallelism over the TP axis
+    if role == "residual":
+        return plan.fsdp
+    return None
+
+
+def roles_for_path(path: str, shape: Tuple[int, ...],
+                   moe_weights: str = "ep") -> Tuple[str, ...]:
+    """Match the rule table; returns one role per *trailing* dim."""
+    moe_rules = _MOE_RULES_DP if moe_weights == "dp" else _MOE_RULES
+    for pat, roles in moe_rules:
+        if re.search(pat, path) and len(shape) >= 3:
+            return roles
+    for pat, roles in _RULES:
+        if re.search(pat, path):
+            return roles
+    return ("none",) * len(shape)
+
+
+def param_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
+                   plan: ShardingPlan) -> ShardStrategy:
+    roles = roles_for_path(path, shape, plan.moe_weights)
+    # leading dims not covered by the role tuple (stacked layers) replicate
+    lead = len(shape) - len(roles)
+    if lead < 0:                            # param rank < rule rank (reduced cfg)
+        roles = roles[-len(shape):]
+        lead = 0
+    entries: list = [None] * lead
+    avail = {a: layout.axis_size(a) for a in layout.alias_name}
+    for dim, role in zip(shape[lead:], roles):
+        axes = _role_axes(role, plan)
+        if not axes:
+            entries.append(None)
+            continue
+        kept = tuple(a for a in axes if a in layout.alias_name)
+        # divisibility fallback: drop axes (innermost first) until it divides
+        while kept and dim % math.prod(layout.axis_size(a) for a in kept):
+            kept = kept[1:]
+        entries.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return layout(*entries)
+
+
+def tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+def make_param_shardings(mesh: Mesh, params_shape, plan: ShardingPlan,
+                         *, memory_kind: Optional[str] = None):
+    """Derive a NamedSharding pytree for a model parameter (shape) tree."""
+    layout = layout_for_mesh(mesh)
+    paths, leaves, treedef = tree_paths(params_shape)
+    mk = memory_kind or ("pinned_host" if plan.params_on_host else None)
+    shardings = [
+        param_strategy(p, tuple(l.shape), layout, plan).named_sharding(
+            mesh, memory_kind=mk)
+        for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def spec_tree(mesh: Mesh, params_shape, plan: ShardingPlan):
+    """Like make_param_shardings but returns raw PartitionSpecs."""
+    layout = layout_for_mesh(mesh)
+    paths, leaves, treedef = tree_paths(params_shape)
+    specs = [param_strategy(p, tuple(l.shape), layout, plan).partition_spec()
+             for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / decode-state shardings
+# ---------------------------------------------------------------------------
+def _fit(entry: Tuple[str, ...]):
+    return entry if len(entry) > 1 else (entry[0] if entry else None)
+
+
+def cache_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
+                   plan: ShardingPlan, *, batch: int) -> ShardStrategy:
+    """Decode-state tensors (dim0 is always the stacked-layer axis):
+
+      k/v           (L, B, S, KV, hd)   attention KV cache
+      ckv / krope   (L, B, S, R)        MLA compressed latent cache
+      state         (L, B, H, P, N) or (L, B, W)   SSM / RG-LRU state
+      conv          (L, B, K-1, C)      causal-conv tail
+
+    Batch shards over dp when divisible; otherwise (long_500k, B=1) the
+    sequence dim absorbs the dp axes — context-parallel flash-decode.  KV
+    heads shard over tp when divisible, else the sequence dim absorbs tp.
+    """
+    dp = tuple(a for a in (plan.dp or ()) if a in layout.alias_name)
+    tp = tuple(a for a in (plan.tp or ()) if a in layout.alias_name)
+    ndim = len(shape)
+    entries: list = [None] * ndim
+
+    def size(axes):
+        return math.prod(layout.axis_size(a) for a in axes) if axes else 1
+
+    leaf = path.rsplit("/", 1)[-1]
+    batch_ok = dp and shape[1] % size(dp) == 0
+    if batch_ok:
+        entries[1] = _fit(dp)
+
+    if leaf in ("k", "v"):
+        seq_axes: Tuple[str, ...] = () if batch_ok else dp
+        if tp and shape[3] % size(tp) == 0:
+            entries[3] = _fit(tp)
+        else:
+            seq_axes = seq_axes + tp
+        if seq_axes and shape[2] % size(seq_axes) == 0:
+            entries[2] = _fit(seq_axes)
+    elif leaf in ("ckv", "krope"):
+        seq_axes = (() if batch_ok else dp) + tp
+        if seq_axes and shape[2] % size(seq_axes) == 0:
+            entries[2] = _fit(seq_axes)
+    elif leaf == "state":
+        # dim2 is heads (SSD) or channels (RG-LRU): shard over tp
+        if ndim >= 3 and tp and shape[2] % size(tp) == 0:
+            entries[2] = _fit(tp)
+    elif leaf == "conv":
+        if ndim >= 4 and tp and shape[3] % size(tp) == 0:
+            entries[3] = _fit(tp)
+
+    return layout(*entries)
+
+
+def make_cache_shardings(mesh: Mesh, cache_shape, plan: ShardingPlan, *,
+                         batch: int, memory_kind: Optional[str] = None):
+    layout = layout_for_mesh(mesh)
+    paths, leaves, treedef = tree_paths(cache_shape)
+    shardings = [
+        cache_strategy(p, tuple(l.shape), layout, plan, batch=batch)
+        .named_sharding(mesh, memory_kind=memory_kind)
+        for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, shardings)

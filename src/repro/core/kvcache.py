@@ -1,0 +1,127 @@
+"""HyperOffload for serving: hierarchical KV-cache pool (paper §3.2).
+
+The paper's inference claim (71K -> 123K tokens at equal latency) comes
+from treating HBM as a cache over the supernode's pooled DRAM.  TPU-native
+adaptation: the cache is split into
+
+  - a **hot window** of the most recent ``hot_window`` tokens, resident in
+    HBM and updated in-place every decode step, and
+  - a **cold archive** of older blocks, resident in host memory
+    (``pinned_host``), attended to in fixed-size blocks that are streamed
+    through HBM with flash-decode LSE combining.
+
+The block stream is orchestrated by the host runtime (one jit'd partial-
+attention kernel per block batch) because XLA SPMD currently rejects
+memory-kind transfers on sliced intermediates inside a traced loop — the
+same reason HyperOffload's layer pipeline is unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class KVPoolConfig:
+    hot_window: int = 8192          # tokens kept in HBM
+    block: int = 2048               # archive streaming granularity
+    dtype: str = "bfloat16"
+
+
+@jax.jit
+def _partial_attn(q, k, v):
+    """Normalised partial attention over one block + its log-sum-exp.
+
+    q: (B, H, D); k,v: (B, S, KV, D).  Returns (o (B,H,Dv), lse (B,H))
+    with ``o`` already softmax-normalised WITHIN the block; blocks are
+    merged by :func:`combine_partials` with softmax weights
+    ``exp(lse_i - LSE_total)`` (standard flash-decode recombination).
+    """
+    B, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, KV, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32))
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = (m[..., 0] + jnp.log(jnp.maximum(l, 1e-30)))
+    return o.reshape(B, H, v.shape[-1]), lse.reshape(B, H)
+
+
+def combine_partials(os_, lses):
+    """Flash-decode recombination of per-block normalised outputs."""
+    m = functools.reduce(jnp.maximum, lses)
+    ws = [jnp.exp(l - m) for l in lses]
+    den = sum(ws)
+    num = sum(o * w[..., None] for o, w in zip(os_, ws))
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+class KVCachePool:
+    """Host-orchestrated hierarchical KV cache for one attention layer."""
+
+    def __init__(self, cfg, batch: int, max_len: int, pool: KVPoolConfig,
+                 mesh: Optional[Mesh] = None):
+        self.pool = pool
+        self.batch = batch
+        self.max_len = max_len
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(pool.dtype)
+        hot = min(pool.hot_window, max_len)
+        self.hot_k = jnp.zeros((batch, hot, kv, hd), dt)
+        self.hot_v = jnp.zeros((batch, hot, kv, hd), dt)
+        self.archive_k: list = []        # host-resident blocks
+        self.archive_v: list = []
+        self.length = 0
+        self._host = None
+        if mesh is not None and "pinned_host" in {
+                m for d in mesh.devices.flat for m in getattr(d, "memory_spaces", [])}:
+            pass
+        if mesh is not None:
+            self._host = NamedSharding(mesh, P(), memory_kind="pinned_host")
+
+    def _to_host(self, x):
+        if self._host is not None:
+            return jax.device_put(x, self._host)
+        return x
+
+    def append(self, k_new, v_new):
+        """Append one token (B, 1, KV, hd); spills a full hot window to host."""
+        hot = self.hot_k.shape[1]
+        slot = self.length % hot
+        if self.length and slot == 0:
+            # hot window full: archive it in `block`-sized chunks
+            for s in range(0, hot, self.pool.block):
+                self.archive_k.append(self._to_host(self.hot_k[:, s:s + self.pool.block]))
+                self.archive_v.append(self._to_host(self.hot_v[:, s:s + self.pool.block]))
+        self.hot_k = jax.lax.dynamic_update_slice_in_dim(self.hot_k, k_new, slot, 1)
+        self.hot_v = jax.lax.dynamic_update_slice_in_dim(self.hot_v, v_new, slot, 1)
+        self.length += 1
+
+    def attend(self, q):
+        """q: (B, H, D) -> (B, H, Dv) attention over hot + archived blocks."""
+        hot = self.hot_k.shape[1]
+        n_hot = ((self.length - 1) % hot) + 1 if self.length else 0
+        accs, lses = [], []
+        a, l = _partial_attn(q, self.hot_k[:, :n_hot], self.hot_v[:, :n_hot])
+        accs.append(a); lses.append(l)
+        for kb, vb in zip(self.archive_k, self.archive_v):
+            kd, vd = jax.device_put((kb, vb))      # stream block to device
+            a, l = _partial_attn(q, kd, vd)
+            accs.append(a); lses.append(l)
+        return combine_partials(accs, lses).astype(q.dtype)
+
+    def hbm_bytes(self) -> int:
+        return sum(int(x.size) * x.dtype.itemsize
+                   for x in (self.hot_k, self.hot_v))
+
+    def host_bytes(self) -> int:
+        return sum(int(b.size) * b.dtype.itemsize for b in self.archive_k) * 2

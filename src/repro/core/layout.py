@@ -1,0 +1,136 @@
+"""HyperShard's declarative Layout abstraction (paper §3.4).
+
+The paper's primary programming abstraction is::
+
+    Layout(device_matrix, alias_name, tensor_map)
+
+  - device_matrix : logical arrangement of accelerators, e.g. (2, 16, 16)
+  - alias_name    : name per device-matrix dimension, e.g. ("pod","data","model")
+  - tensor_map    : per tensor dimension, which device dims shard it
+
+As in the paper, declaring a Layout performs a *formal derivation* of the
+parallel strategy — no tensor is physically sliced until runtime.  In this
+JAX implementation the derivation target is a
+``jax.sharding.NamedSharding``; the device matrix corresponds 1:1 to a
+``jax.sharding.Mesh``.
+
+Example (paper Listing 2)::
+
+    layout = Layout((2, 2), ("x", "y"))
+    strategy = layout("x", "y")          # shard dim0 on x, dim1 on y
+    spec = strategy.partition_spec()     # PartitionSpec('x', 'y')
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRef = Union[str, None, Tuple[str, ...]]
+
+
+class LayoutError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    device_matrix: Tuple[int, ...]
+    alias_name: Tuple[str, ...]
+
+    def __post_init__(self):
+        if len(self.device_matrix) != len(self.alias_name):
+            raise LayoutError(
+                f"device_matrix {self.device_matrix} and alias_name "
+                f"{self.alias_name} must have equal rank")
+        if len(set(self.alias_name)) != len(self.alias_name):
+            raise LayoutError(f"duplicate alias in {self.alias_name}")
+        for n in self.device_matrix:
+            if n < 1:
+                raise LayoutError(f"non-positive device dim {n}")
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.device_matrix)
+
+    def axis_size(self, alias: str) -> int:
+        try:
+            return self.device_matrix[self.alias_name.index(alias)]
+        except ValueError:
+            raise LayoutError(f"unknown alias {alias!r}; have {self.alias_name}")
+
+    def __call__(self, *tensor_map: AxisRef) -> "ShardStrategy":
+        used: set = set()
+        for entry in tensor_map:
+            axes = _axes(entry)
+            for a in axes:
+                if a not in self.alias_name:
+                    raise LayoutError(
+                        f"tensor_map references {a!r}, not in {self.alias_name}")
+                if a in used:
+                    raise LayoutError(f"alias {a!r} used for two tensor dims")
+                used.add(a)
+        return ShardStrategy(self, tuple(tensor_map))
+
+
+def _axes(entry: AxisRef) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStrategy:
+    """A formally derived parallel strategy for one tensor (paper Fig. 6)."""
+    layout: Layout
+    tensor_map: Tuple[AxisRef, ...]
+
+    def partition_spec(self) -> P:
+        return P(*self.tensor_map)
+
+    def shards_per_dim(self) -> Tuple[int, ...]:
+        return tuple(math.prod(self.layout.axis_size(a) for a in _axes(e))
+                     for e in self.tensor_map)
+
+    def shard_shape(self, global_shape: Sequence[int]) -> Tuple[int, ...]:
+        """Derive the per-device shard shape (validates divisibility)."""
+        if len(global_shape) < len(self.tensor_map):
+            raise LayoutError(
+                f"tensor rank {len(global_shape)} < tensor_map rank "
+                f"{len(self.tensor_map)}")
+        out = []
+        nper = self.shards_per_dim()
+        for i, dim in enumerate(global_shape):
+            n = nper[i] if i < len(nper) else 1
+            if dim % n:
+                raise LayoutError(
+                    f"dim {i} of size {dim} not divisible by {n} shards")
+            out.append(dim // n)
+        return tuple(out)
+
+    def divisible(self, global_shape: Sequence[int]) -> bool:
+        try:
+            self.shard_shape(global_shape)
+            return True
+        except LayoutError:
+            return False
+
+    def named_sharding(self, mesh: Mesh, *,
+                       memory_kind: Optional[str] = None) -> NamedSharding:
+        if tuple(mesh.axis_names) != self.layout.alias_name or \
+                tuple(mesh.devices.shape) != self.layout.device_matrix:
+            raise LayoutError(
+                f"mesh {mesh.devices.shape}/{mesh.axis_names} does not match "
+                f"layout {self.device_matrix}/{self.alias_name}")
+        kw = {"memory_kind": memory_kind} if memory_kind else {}
+        return NamedSharding(mesh, self.partition_spec(), **kw)
+
+
+def layout_for_mesh(mesh: Mesh) -> Layout:
+    """The Layout describing an existing mesh's device matrix."""
+    return Layout(tuple(mesh.devices.shape), tuple(mesh.axis_names))

@@ -1,0 +1,67 @@
+"""Mesh context for sharding hints inside model code.
+
+Model code never names a concrete mesh; it calls ``constrain(x, "data",
+None, "model")`` with *logical* axis names.  When a mesh is active (set by
+the launcher / train step builder) this becomes a
+``with_sharding_constraint``; with no mesh it is the identity, so the same
+model code runs single-device (smoke tests) and distributed (dry-run)
+unchanged.  This is the runtime half of HyperShard's "declare, don't
+implement" contract.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _filter_spec(mesh: Mesh, spec):
+    """Drop axis names the mesh doesn't have (e.g. 'pod' on single-pod)."""
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a in mesh.axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(s if s in mesh.axis_names else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Sharding hint: no-op without an active mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sp = _filter_spec(mesh, spec)
+    # drop shardings that don't divide evenly (e.g. tiny smoke shapes)
+    for dim, s in zip(x.shape, sp):
+        if s is None:
+            continue
+        axes = (s,) if isinstance(s, str) else s
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))

@@ -1,0 +1,198 @@
+"""HyperOffload (paper §3.2): compute/state decoupling via hierarchical memory.
+
+The supernode's pooled DRAM maps to TPU host memory (``pinned_host``
+memory kind); HBM is the managed cache.  Three mechanisms, mirroring the
+paper's "multi-level cache pipeline scheduling" and "holistic graph
+orchestration":
+
+1. **Parameter offload** — weights live in host memory as jit arguments;
+   the step function fetches them to device.  Two granularities:
+     - ``fetch_tree``: one whole-tree device_put at step entry (the XLA
+       scheduler hoists the copies; simplest, HBM-peak = full params), and
+     - ``streamed_apply``: per-layer unrolled fetch so HBM holds only
+       ``prefetch_depth`` layers at a time — the paper's cache-pipeline,
+       with the copy of layer *i+1* overlapping compute of layer *i*
+       under XLA's latency-hiding scheduler.
+   (A scan-with-memory-kind variant is rejected by current XLA SPMD —
+   "side-effect ops cannot be replicated" — so streaming is expressed as
+   an unrolled graph; this is exactly the paper's "cache operators are
+   inserted into the execution flow by the compiler".)
+
+2. **Activation offload** — ``jax.checkpoint`` policy that offloads
+   named residuals to host during the forward pass and fetches them back
+   for the backward pass.
+
+3. **Optimizer-state offload** — AdamW moments live in host memory
+   between steps (see :mod:`repro.optim.adamw`), fetched/updated/returned
+   inside the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import checkpoint_policies as _cp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import Mesh, NamedSharding
+
+RESIDUAL_NAME = "hyperoffload_resid"
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    params_on_host: bool = False
+    opt_state_on_host: bool = False
+    activations_to_host: bool = False
+    stream_layers: bool = False           # per-layer pipeline (unrolled)
+    prefetch_depth: int = 2               # layers resident in HBM at once
+
+
+def with_memory_kind(shardings, kind: str):
+    """Rewrite a NamedSharding pytree to a different memory kind."""
+    return jax.tree.map(
+        lambda s: NamedSharding(s.mesh, s.spec, memory_kind=kind), shardings)
+
+
+def _fully_sharded(s: NamedSharding) -> bool:
+    """True if the spec uses every mesh axis of size > 1.
+
+    XLA SPMD rejects host-placement annotations on (partially) replicated
+    tensors ("side-effect ops cannot be replicated"), so HyperOffload only
+    hosts fully-sharded leaves — which are exactly the large ones worth
+    offloading; norms/biases stay in HBM.
+    """
+    if len(s.spec) < 2:
+        return False          # 1-D leaves: SPMD drops the annotation sharding
+    used = set()
+    for e in s.spec:
+        if e is None:
+            continue
+        for a in (e,) if isinstance(e, str) else e:
+            used.add(a)
+    need = {a for a in s.mesh.axis_names if s.mesh.shape[a] > 1}
+    return need <= used
+
+
+def host_shardings(shardings):
+    """Host-place every leaf that XLA can host-place (see _fully_sharded)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(s.mesh, s.spec, memory_kind="pinned_host")
+        if _fully_sharded(s) else s, shardings)
+
+
+def device_shardings(shardings):
+    return with_memory_kind(shardings, "device")
+
+
+def fetch_tree(tree, shardings):
+    """Host->device fetch for the leaves host_shardings placed on host.
+
+    (Leaves that stayed in HBM — replicated norms/biases — pass through;
+    a device-placement annotation on them would hit the same SPMD
+    replication restriction as the host one.)
+    """
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(s.mesh, s.spec,
+                                                     memory_kind="device"))
+        if _fully_sharded(s) else x,
+        tree, shardings)
+
+
+def offload_tree(tree, shardings):
+    """Device->host offload (same selectivity as host_shardings)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(s.mesh, s.spec,
+                                                     memory_kind="pinned_host"))
+        if _fully_sharded(s) else x,
+        tree, shardings)
+
+
+def mark_residual(x):
+    """Tag an activation for the offload remat policy."""
+    return checkpoint_name(x, RESIDUAL_NAME)
+
+
+def activation_offload_policy():
+    """Remat policy: residuals go to host on fwd, return for bwd."""
+    return _cp.save_and_offload_only_these_names(
+        names_which_can_be_saved=[],
+        names_which_can_be_offloaded=[RESIDUAL_NAME],
+        offload_src="device", offload_dst="pinned_host")
+
+
+def unstack_layers(stacked):
+    """Split a stacked (L, ...) parameter pytree into a list of L pytrees.
+
+    Used to present per-layer host buffers as separate jit arguments for
+    the streamed (unrolled) pipeline.
+    """
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    return [jax.tree.map(lambda a: a[i], stacked) for i in range(L)]
+
+
+def streamed_apply(layer_fn: Callable, x, host_layer_params: list,
+                   layer_shardings, *extra):
+    """The cache-pipeline: fetch layer i (unrolled), apply, let XLA overlap.
+
+    ``host_layer_params`` is a list of per-layer pytrees that are jit
+    arguments living in host memory; ``layer_shardings`` is the matching
+    device sharding pytree for ONE layer.
+    """
+    for lp in host_layer_params:
+        lp_dev = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(s.mesh, s.spec,
+                                                         memory_kind="device")),
+            lp, layer_shardings)
+        x = layer_fn(x, lp_dev, *extra)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM model (used by the offload benchmarks; v5e numbers)
+# ---------------------------------------------------------------------------
+HBM_BYTES_PER_CHIP = 16 * 2 ** 30
+D2H_BW = 50e9          # host<->device per chip (PCIe-ish lower bound), B/s
+
+
+def train_hbm_bytes(cfg, batch_per_chip: int, seq: int, *, offload: OffloadConfig,
+                    tp: int = 1) -> dict:
+    """First-order HBM accounting for one training step."""
+    p = cfg.param_count()
+    bytes_bf16, bytes_f32 = 2, 4
+    params = p * bytes_bf16 / tp
+    grads = p * bytes_bf16 / tp
+    opt = 2 * p * bytes_f32 / tp
+    master = p * bytes_f32 / tp
+    resid = cfg.num_layers * batch_per_chip * seq * cfg.d_model * bytes_bf16
+    out = {
+        "params": 0.0 if offload.params_on_host and offload.stream_layers else params,
+        "streamed_window": (offload.prefetch_depth / max(cfg.num_layers, 1)) * params
+        if offload.params_on_host and offload.stream_layers else 0.0,
+        "grads": grads,
+        "opt_state": 0.0 if offload.opt_state_on_host else opt + master,
+        "activations": 0.0 if offload.activations_to_host else resid,
+    }
+    out["total"] = sum(out.values())
+    return out
+
+
+def serve_hbm_bytes(cfg, batch: int, seq: int, *, kv_on_host_frac: float = 0.0,
+                    tp: int = 1, window: Optional[int] = None) -> dict:
+    """First-order HBM accounting for decode with optional KV offload."""
+    p = cfg.active_param_count()
+    params = p * 2 / tp
+    if cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+    elif cfg.family == "ssm":
+        per_tok = 0
+    else:
+        per_tok = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    eff = min(seq, window) if window else seq
+    n_kv_layers = sum(1 for m, _ in cfg.block_kinds()
+                      if m in ("attn", "local", "mla"))
+    kv = n_kv_layers * batch * eff * per_tok * 2 / tp
+    return {"params": params, "kv_device": kv * (1 - kv_on_host_frac),
+            "kv_host": kv * kv_on_host_frac,
+            "total": params + kv * (1 - kv_on_host_frac)}

@@ -1,0 +1,75 @@
+"""Supernode topology model + roofline hardware constants.
+
+Target hardware for the dry-run/roofline: TPU v5e pods (the assignment's
+production mesh), with the paper's supernode abstraction layered on top:
+the framework sees one logical device matrix; this module knows what that
+matrix physically is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+# -- roofline constants (per chip), from the assignment -----------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link
+HBM_BYTES = 16 * 2 ** 30        # v5e HBM capacity
+HOST_BW = 50e9                  # host<->device (HyperOffload path)
+
+
+@dataclasses.dataclass(frozen=True)
+class SupernodeSpec:
+    """Describes one supernode (paper §2.3: Matrix384-like abstraction)."""
+    name: str
+    chips: int
+    pods: int
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW_PER_LINK
+    hbm_bytes: int = HBM_BYTES
+
+    @property
+    def total_flops(self) -> float:
+        return self.peak_flops * self.chips
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh_shape[self.axis_names.index(name)]
+
+
+SINGLE_POD = SupernodeSpec("v5e-pod-256", 256, 1, (16, 16), ("data", "model"))
+MULTI_POD = SupernodeSpec("v5e-2pod-512", 512, 2, (2, 16, 16),
+                          ("pod", "data", "model"))
+
+
+def spec_for(multi_pod: bool) -> SupernodeSpec:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+# -- roofline terms ------------------------------------------------------------
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_collective_bytes: float,
+                   spec: SupernodeSpec = SINGLE_POD) -> Dict[str, float]:
+    """The three per-step time lower bounds, in seconds.
+
+    Inputs are PER-DEVICE quantities (XLA cost_analysis reports post-SPMD
+    per-device numbers), so no further division by chip count.
+    """
+    compute = per_device_flops / spec.peak_flops
+    memory = per_device_bytes / spec.hbm_bw
+    collective = per_device_collective_bytes / spec.ici_bw
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "bound_s": max(compute, memory, collective)}
+
+
+def model_flops(cfg, tokens: int, *, training: bool) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params."""
+    n = cfg.active_param_count()
+    mult = 6.0 if training else 2.0
+    return mult * n * tokens

@@ -1,0 +1,125 @@
+"""Pallas TPU flash attention (forward), GQA + causal + sliding window.
+
+Grid: (B*KV, num_q_blocks, num_kv_blocks), kv innermost (sequential on
+TPU).  Running (acc, m, l) live in VMEM scratch; out is written on the
+last kv step.  Block sizes are MXU-aligned (q/k blocks multiples of 128
+where the shape allows) and sized so the working set
+(q + k + v + acc ~ G*bq*D + 2*bk*D + G*bq*Dv floats) fits VMEM.
+
+Causal block skipping: kv blocks entirely above the diagonal are skipped
+with ``pl.when`` (no MXU work), matching the oracle's semantics exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq, bk, nk, G, causal, window, scale, q_offset):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_offset + qi * bq
+    k_start = ki * bk
+    # block-level skips: kv blocks fully above the diagonal (causal) or
+    # fully outside every query's window contribute nothing
+    live = jnp.bool_(True)
+    if causal:
+        live &= q_start + bq - 1 >= k_start
+    if window is not None:
+        live &= q_start - (k_start + bk - 1) < window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]                       # (G, bq, D)
+        k = k_ref[0]                       # (bk, D)
+        v = v_ref[0]                       # (bk, Dv)
+        s = jax.lax.dot_general(
+            q.reshape(-1, q.shape[-1]), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(G, bq, bk) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= qp >= kp
+        if window is not None:
+            mask &= qp - kp < window
+        s = jnp.where(mask[None], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(-1, bk).astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(G, bq, -1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: (B,Sq,H,Dk), k/v: (B,Sk,KV,D*) -> (B,Sq,H,Dv)."""
+    B, Sq, H, Dk = q.shape
+    Sk, KV, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else Dk ** -0.5
+    bq, bk = _block(Sq, block_q), _block(Sk, block_k)
+    nq, nk = Sq // bq, Sk // bk
+
+    qh = q.reshape(B, Sq, KV, G, Dk).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV, G, Sq, Dk)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dk)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dv)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, G=G,
+                               causal=causal, window=window, scale=scale,
+                               q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, Dk), lambda b, qi, ki: (b, 0, qi, 0)),
+            pl.BlockSpec((1, bk, Dk), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, Dv), lambda b, qi, ki: (b, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq, Dv), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return (out.reshape(B, KV, G, Sq, Dv).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, Dv))

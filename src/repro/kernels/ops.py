@@ -1,0 +1,96 @@
+"""Public kernel API.
+
+Every op picks an implementation:
+  - ``pallas``   : the Pallas TPU kernel (``interpret=True`` on CPU for tests)
+  - ``ref``      : the pure-jnp oracle in :mod:`repro.kernels.ref`
+  - ``auto``     : pallas on TPU backends, ref elsewhere (the default)
+
+The dry-run container is CPU-only, so production lowering exercises the
+ref path; kernels are validated against the oracles in interpret mode by
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_MODE = "auto"   # overridable for tests / benchmarks
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "ref", "pallas", "pallas_interpret")
+    _MODE = mode
+
+
+def _use_pallas() -> Optional[bool]:
+    """Returns None for ref, False for pallas-interpret, True for pallas."""
+    if _MODE == "ref":
+        return None
+    if _MODE == "pallas":
+        return True
+    if _MODE == "pallas_interpret":
+        return False
+    return True if jax.default_backend() == "tpu" else None
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    scale=None):
+    use = _use_pallas()
+    if use is None:
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, scale=scale)
+    from repro.kernels import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, scale=scale,
+                              interpret=not use)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, scale=None):
+    use = _use_pallas()
+    if use is None:
+        return ref.decode_attention(q, k_cache, v_cache, length, scale=scale)
+    from repro.kernels import decode_attention as da
+    return da.decode_attention(q, k_cache, v_cache, length, scale=scale,
+                               interpret=not use)
+
+
+def grouped_matmul(x, w, group_sizes):
+    use = _use_pallas()
+    if use is None:
+        return ref.grouped_matmul(x, w, group_sizes)
+    from repro.kernels import grouped_matmul as gm
+    return gm.grouped_matmul(x, w, group_sizes, interpret=not use)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=64, init_state=None):
+    use = _use_pallas()
+    if use is None:
+        return ref.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                            init_state=init_state)
+    from repro.kernels import ssd_scan as ss
+    return ss.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, init_state=init_state,
+                       interpret=not use)
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, state):
+    return ref.ssd_decode_step(x, dt, A, Bm, Cm, state)
+
+
+def rglru_scan(x, input_gate, a_gate, log_a, *, init_state=None, c=8.0):
+    use = _use_pallas()
+    if use is None:
+        return ref.rglru_scan(x, input_gate, a_gate, log_a,
+                              init_state=init_state, c=c)
+    from repro.kernels import rglru_scan as rs
+    return rs.rglru_scan(x, input_gate, a_gate, log_a, init_state=init_state,
+                         c=c, interpret=not use)
+
+
+def rglru_decode_step(x, input_gate, a_gate, log_a, state, *, c=8.0):
+    return ref.rglru_decode_step(x, input_gate, a_gate, log_a, state, c=c)

@@ -1,0 +1,272 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, and extract the roofline inputs from the compiled
+artifacts.  No real allocation happens — inputs are ShapeDtypeStructs.
+
+NOTE: the two os.environ lines below MUST run before any jax import (jax
+locks the device count on first init), which is why they sit above every
+other import.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch granite-3-2b ...] [--shape train_4k ...] \
+        [--multi-pod] [--both] [--out results/dryrun.json]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.core import hypershard, offload as off, topology
+from repro.core.hypershard import ShardingPlan
+from repro.launch import hlo_stats, specs
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw as opt_mod
+from repro.serve import engine
+from repro.train import steps as steps_mod
+
+
+def scaled_depth_cfg(cfg, m: int):
+    """Variant of ``cfg`` whose scanned segment repeats ``m`` times.
+
+    XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so additive metrics (flops, bytes, collective traffic) from the
+    full-config compile undercount by ~num_layers.  We therefore compile
+    depth-1 and depth-2 variants and extrapolate linearly — exact whether
+    XLA rolls or unrolls the scan, because per-iteration cost is constant.
+    """
+    import dataclasses as dc
+    if cfg.family == "hybrid":
+        pat = len(cfg.rglru.block_pattern)
+        L = pat * m + cfg.num_layers % pat
+    elif cfg.moe is not None:
+        L = cfg.moe.first_k_dense + m
+    else:
+        L = m
+    return dc.replace(cfg, num_layers=L)
+
+
+def true_repeat(cfg) -> int:
+    """Trip count of the scanned segment in the real config."""
+    if cfg.family == "hybrid":
+        return cfg.num_layers // len(cfg.rglru.block_pattern)
+    if cfg.moe is not None:
+        return cfg.num_layers - cfg.moe.first_k_dense
+    return cfg.num_layers
+
+
+def plan_for(cfg, shape, overrides: Optional[dict] = None) -> ShardingPlan:
+    """Default HyperShard plan per workload kind."""
+    if shape.kind == "train":
+        plan = ShardingPlan(tp=("model",), fsdp=("pod", "data"),
+                            dp=("pod", "data"))
+    else:
+        # inference: TP-only weights (replicated over dp), dp on batch
+        plan = ShardingPlan(tp=("model",), fsdp=None, dp=("pod", "data"))
+    if overrides:
+        plan = plan.replace(**overrides)
+    return plan
+
+
+def _lower_one(cfg, shape, mesh, plan, *, moe_dispatch, offload_cfg,
+               unroll=False):
+    """Lower the appropriate step for (cfg, shape) on mesh."""
+    if shape.kind == "train":
+        step, _ = steps_mod.make_train_step(
+            cfg, mesh, plan, opt_mod.AdamWConfig(),
+            offload_cfg=offload_cfg, moe_dispatch=moe_dispatch,
+            multimodal=bool(cfg.frontend_dim), unroll=unroll)
+        p_sds = specs.params_specs(cfg)
+        o_sds = jax.eval_shape(opt_mod.init_adamw, p_sds)
+        batch = specs.input_specs(cfg, shape)["batch"]
+        return step.lower(p_sds, o_sds, batch)
+    if shape.kind == "prefill":
+        step, _ = engine.make_prefill_step(cfg, mesh, plan,
+                                           multimodal=bool(cfg.frontend_dim),
+                                           unroll=unroll,
+                                           batch=shape.global_batch,
+                                           seq_len=shape.seq_len,
+                                           moe_dispatch=moe_dispatch)
+        ins = specs.input_specs(cfg, shape)
+        p_sds = specs.params_specs(cfg)
+        if "prefix_embeds" in ins:
+            return step.lower(p_sds, ins["tokens"], ins["prefix_embeds"])
+        return step.lower(p_sds, ins["tokens"])
+    # decode
+    wo = specs.window_override_for(cfg, shape)
+    step, _ = engine.make_serve_step(
+        cfg, mesh, plan, batch=shape.global_batch,
+        cache_len=shape.seq_len, window_override=wo, unroll=unroll,
+        moe_dispatch=moe_dispatch)
+    ins = specs.input_specs(cfg, shape)
+    p_sds = specs.params_specs(cfg)
+    return step.lower(p_sds, ins["token"], ins["pos"], ins["caches"])
+
+
+def _additive_metrics(compiled) -> dict:
+    """Per-device additive metrics of one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    coll = hlo_stats.collective_stats(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll["total_bytes"]),
+        "collective_by_kind": coll["bytes_by_kind"],
+        "collective_counts": coll["count_by_kind"],
+    }
+
+
+def _extrapolate(m1: dict, m2: dict, repeat: int) -> dict:
+    """metric(R) = metric(1) + (metric(2) - metric(1)) * (R - 1)."""
+    def ext(a, b):
+        return a + (b - a) * (repeat - 1)
+
+    def ext_dict(da, db):
+        keys = set(da) | set(db)
+        return {k: ext(da.get(k, 0.0), db.get(k, 0.0)) for k in keys}
+
+    return {
+        "flops": ext(m1["flops"], m2["flops"]),
+        "bytes_accessed": ext(m1["bytes_accessed"], m2["bytes_accessed"]),
+        "collective_bytes": ext(m1["collective_bytes"], m2["collective_bytes"]),
+        "collective_by_kind": ext_dict(m1["collective_by_kind"],
+                                       m2["collective_by_kind"]),
+        "collective_counts": ext_dict(m1["collective_counts"],
+                                      m2["collective_counts"]),
+    }
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
+               plan_overrides: Optional[dict] = None,
+               moe_dispatch: str = "gshard",
+               offload_cfg: off.OffloadConfig = off.OffloadConfig(),
+               skip_depth_scaling: bool = False,
+               attn_mode: str = "ring"):
+    """Lower + compile one (arch, shape, mesh). Returns (result, compiled).
+
+    The FULL config is compiled (proof of lowering + memory analysis);
+    depth-1/-2 variants are compiled to extrapolate the while-loop-
+    undercounted additive metrics (see ``scaled_depth_cfg``).
+    """
+    from repro.models.attention import set_attention_mode
+    set_attention_mode(attn_mode)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan_for(cfg, shape, plan_overrides)
+    kw = dict(moe_dispatch=moe_dispatch, offload_cfg=offload_cfg)
+
+    t0 = time.perf_counter()
+    lowered = _lower_one(cfg, shape, mesh, plan, **kw)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    if skip_depth_scaling:
+        metrics = _additive_metrics(compiled)
+    else:
+        c1 = _lower_one(scaled_depth_cfg(cfg, 1), shape, mesh, plan,
+                        unroll=True, **kw).compile()
+        c2 = _lower_one(scaled_depth_cfg(cfg, 2), shape, mesh, plan,
+                        unroll=True, **kw).compile()
+        metrics = _extrapolate(_additive_metrics(c1), _additive_metrics(c2),
+                               true_repeat(cfg))
+        del c1, c2
+
+    ma = compiled.memory_analysis()
+    n_dev = 512 if multi_pod else 256
+    spec = topology.MULTI_POD if multi_pod else topology.SINGLE_POD
+    terms = topology.roofline_terms(metrics["flops"], metrics["bytes_accessed"],
+                                    metrics["collective_bytes"], spec)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill") else 1)
+    mf = topology.model_flops(cfg, tokens, training=shape.kind == "train")
+    mf_per_dev = mf / n_dev
+
+    peak = int(getattr(ma, "peak_memory_in_bytes", 0))
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": spec.name,
+        "multi_pod": multi_pod, "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            **metrics,
+            "peak_memory_bytes": peak,
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "host_argument_bytes": int(getattr(ma, "host_argument_size_in_bytes", 0)),
+        },
+        "roofline": terms,
+        "model_flops_per_device": mf_per_dev,
+        "useful_flops_ratio": (mf_per_dev / metrics["flops"])
+        if metrics["flops"] else None,
+        "fits_hbm": peak <= spec.hbm_bytes,
+        "plan": {"fsdp": plan.fsdp, "tp": plan.tp,
+                 "attn_mode": attn_mode, "moe_dispatch": moe_dispatch},
+    }
+    return result, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-dispatch", default="gshard")
+    ap.add_argument("--attn-mode", default="ring",
+                    choices=["ring", "head", "plain"])
+    ap.add_argument("--print-hlo-ops", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or [a for a in list_archs() if a != "llama3-8b"]
+    shapes = args.shape or list(SHAPES)
+    pods = [False, True] if args.both else [args.multi_pod]
+
+    results = []
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'}"
+                try:
+                    res, compiled = lower_pair(
+                        arch, shape, multi_pod=mp,
+                        moe_dispatch=args.moe_dispatch,
+                        attn_mode=args.attn_mode)
+                    results.append(res)
+                    r = res["roofline"]
+                    print(f"OK   {tag}: compile={res['compile_s']:.1f}s "
+                          f"flops/dev={res['per_device']['flops']:.3g} "
+                          f"coll/dev={res['per_device']['collective_bytes']:.3g}B "
+                          f"peak={res['per_device']['peak_memory_bytes']/2**30:.2f}GiB "
+                          f"bound={r['dominant']} ({r['bound_s']*1e3:.2f}ms)",
+                          flush=True)
+                    if args.print_hlo_ops:
+                        print("   ", hlo_stats.op_histogram(compiled.as_text()))
+                    del compiled
+                except Exception as e:  # noqa: BLE001
+                    failures.append({"pair": tag, "error": repr(e)})
+                    print(f"FAIL {tag}: {e!r}", flush=True)
+                    traceback.print_exc()
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump({"results": results, "failures": failures},
+                                  f, indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

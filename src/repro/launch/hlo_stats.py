@@ -1,0 +1,108 @@
+"""HLO-text analysis: collective wire-bytes per device.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled (post-SPMD, per-device) HLO and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+converted to ring-algorithm wire bytes:
+
+  all-gather       out_bytes * (n-1)/n
+  reduce-scatter   out_bytes * (n-1)
+  all-reduce       2 * bytes * (n-1)/n
+  all-to-all       bytes * (n-1)/n
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _array_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def collective_stats(hlo_text: str, *, default_group: int = 2) -> Dict:
+    """Per-device wire bytes by collective kind, from post-SPMD HLO text."""
+    bytes_by_kind: Dict[str, float] = defaultdict(float)
+    count_by_kind: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        b = _array_bytes(type_str)
+        n = _group_size(line, default_group)
+        if n <= 1:
+            continue
+        if kind == "all-gather":
+            wire = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = b * (n - 1)
+        elif kind == "all-reduce":
+            # result type of AR(-start) may repeat operand tuples; halve dupes
+            wire = 2 * b * (n - 1) / n
+            if op.endswith("-start") and type_str.startswith("("):
+                wire /= 2          # start op tuples (operand, result)
+        elif kind == "all-to-all":
+            wire = b * (n - 1) / n
+        else:                      # collective-permute
+            wire = b
+            if op.endswith("-start") and type_str.startswith("("):
+                wire /= 2
+        bytes_by_kind[kind] += wire
+        count_by_kind[kind] += 1
+    return {
+        "bytes_by_kind": dict(bytes_by_kind),
+        "count_by_kind": dict(count_by_kind),
+        "total_bytes": sum(bytes_by_kind.values()),
+    }
+
+
+def op_histogram(hlo_text: str, top: int = 20):
+    """Count HLO op kinds (remat/duplication diagnostics)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

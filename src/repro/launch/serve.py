@@ -1,0 +1,51 @@
+"""Serving launcher: batched generation with optional sliding window.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --batch 4 --prompt-len 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window decode cache (0 = full)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    gen = Generator(cfg, params,
+                    max_len=args.prompt_len + args.max_new + 8,
+                    window_override=args.window or None)
+    prompts = jnp.ones((args.batch, args.prompt_len), jnp.int32)
+
+    t0 = time.perf_counter()
+    out = gen.generate(prompts, GenerateConfig(max_new_tokens=args.max_new,
+                                               temperature=args.temperature))
+    dt = time.perf_counter() - t0
+    n_new = args.batch * args.max_new
+    print(f"generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s on this host)")
+    print("first sequence:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step the
+shape lowers:
+  train_4k      -> train_step(params, opt, batch)
+  prefill_32k   -> prefill_step(params, tokens[, prefix_embeds])
+  decode_32k / long_500k -> serve_step(params, token, pos, caches)
+
+Decode shapes for full-attention architectures at 500K context use the
+sliding-window cache (``cfg.long_context_window``); SSM/hybrid archs carry
+their native constant-size state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def needs_window_override(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k on a full-attention arch -> sliding-window cache variant."""
+    if shape.name != "long_500k":
+        return False
+    return cfg.family not in ("ssm", "hybrid")
+
+
+def window_override_for(cfg: ModelConfig, shape: ShapeConfig):
+    return cfg.long_context_window if needs_window_override(cfg, shape) else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "inputs": SDS((B, S), jnp.int32),
+        "targets": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+    }
+    return out
+
+
+def prefix_specs(cfg: ModelConfig, shape: ShapeConfig):
+    if not cfg.frontend_dim:
+        return None
+    return SDS((shape.global_batch, cfg.num_prefix_tokens, cfg.frontend_dim),
+               jnp.bfloat16)
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    wo = window_override_for(cfg, shape)
+    return jax.eval_shape(lambda: M.init_caches(
+        cfg, shape.global_batch, shape.seq_len, window_override=wo))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return {
+        "token": SDS((shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "caches": cache_specs(cfg, shape),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for (arch, shape), keyed by step argument."""
+    if shape.kind == "train":
+        out = {"batch": batch_specs(cfg, shape)}
+        pe = prefix_specs(cfg, shape)
+        if pe is not None:
+            out["batch"]["prefix_embeds"] = pe
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((shape.global_batch, shape.seq_len), jnp.int32)}
+        pe = prefix_specs(cfg, shape)
+        if pe is not None:
+            out["prefix_embeds"] = pe
+        return out
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --shape train_4k [--reduced] [--steps 100] [--offload] \
+        [--moe-dispatch gshard|ragged] [--mesh auto|none]
+
+On this CPU container use ``--reduced`` (the full configs are exercised by
+the dry-run); on a real slice drop it and pass ``--mesh auto``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, ShapeConfig, get_config
+from repro.core import offload as off
+from repro.core.hypershard import ShardingPlan
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--offload", action="store_true",
+                    help="HyperOffload: params+opt state on host")
+    ap.add_argument("--moe-dispatch", default="gshard",
+                    choices=["gshard", "ragged"])
+    ap.add_argument("--mesh", default="none", choices=["none", "auto"])
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        shape = ShapeConfig("reduced", 64, 4, "train")
+    else:
+        shape = SHAPES[args.shape]
+
+    mesh = make_host_mesh() if args.mesh == "auto" else None
+    plan = ShardingPlan() if mesh is not None else None
+    ocfg = off.OffloadConfig(params_on_host=args.offload,
+                             opt_state_on_host=args.offload)
+
+    def log(m):
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"grad_norm {m['grad_norm']:.3f}  lr {m['lr']:.2e}  "
+              f"{m['wall_s']:.1f}s", flush=True)
+
+    train(cfg, shape, mesh=mesh, plan=plan,
+          adamw=AdamWConfig(lr=args.lr, total_steps=args.steps),
+          train_cfg=TrainConfig(num_steps=args.steps, log_every=10,
+                                ckpt_every=args.steps if args.ckpt_dir else 0,
+                                ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt"),
+          offload_cfg=ocfg, moe_dispatch=args.moe_dispatch, hook=log)
+
+
+if __name__ == "__main__":
+    main()

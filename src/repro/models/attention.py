@@ -1,0 +1,152 @@
+"""GQA / MHA / sliding-window attention with KV cache.
+
+Three entry modes share one parameter set:
+  - ``attn_forward``       : full-sequence (training)
+  - ``attn_prefill``       : full-sequence, returns the populated KV cache
+  - ``attn_decode``        : one token against an existing cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meshctx import constrain, current_mesh
+from repro.kernels import ops
+from repro.models.common import apply_rope, dense_init, dtype_of
+
+
+_ATTN_MODE = "ring"      # "ring" | "head" | "plain" — see set_attention_mode
+
+
+def set_attention_mode(mode: str) -> None:
+    """Select the distributed attention strategy.
+
+    ``head``: Megatron-style head-sharded TP (the paper-era baseline;
+    requires KV heads divisible by the model axis, and XLA realises the
+    seq<->head reshard as replicate-then-reslice — activation-sized
+    all-gathers fwd + all-reduces bwd per layer).
+    ``ring`` (default, beyond-paper): q/k/v stay sequence-sharded over the
+    model axis matching the residual layout; KV chunks rotate by ppermute.
+    No resharding, no KV/model-axis divisibility requirement, and the
+    per-step transfer overlaps the previous chunk's compute.
+    Recorded as §Perf iteration in EXPERIMENTS.md.
+    """
+    global _ATTN_MODE
+    assert mode in ("ring", "head", "plain")
+    _ATTN_MODE = mode
+
+
+def full_attention(q, k, v, *, window=None, scale=None):
+    """Strategy-dispatching full-sequence attention (HyperShard-governed)."""
+    mesh = current_mesh()
+    B, S, H, _ = q.shape
+    KV = k.shape[2]
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if (_ATTN_MODE == "head" and mesh is not None and tp > 1
+            and KV % tp == 0 and H % tp == 0):
+        q = constrain(q, ("pod", "data"), None, "model", None)
+        k = constrain(k, ("pod", "data"), None, "model", None)
+        v = constrain(v, ("pod", "data"), None, "model", None)
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  scale=scale)
+        return constrain(out, ("pod", "data"), None, "model", None)
+    from repro.core.ring_attention import ring_applicable, ring_attention
+    if _ATTN_MODE != "plain" and ring_applicable(mesh, S):
+        return ring_attention(q, k, v, mesh, window=window, scale=scale)
+    return ops.flash_attention(q, k, v, causal=True, window=window,
+                               scale=scale)
+
+
+def init_attention(cfg, key):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, KV * hd, dt),
+        "wv": dense_init(ks[2], d, KV * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, x, positions, cfg, *, window: Optional[int] = None):
+    """(B, S, D) -> (B, S, D); full-sequence causal attention."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = full_attention(q, k, v, window=window)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, KV, hd), dtype),
+    }
+
+
+def attn_prefill(p, x, positions, cfg, *, window: Optional[int] = None):
+    """Full-sequence forward that also returns the KV cache.
+
+    When ``window`` is set and smaller than S the cache holds only the last
+    ``window`` keys (ring layout with slot = pos % window).
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = full_attention(q, k, v, window=window)
+    if window is not None and window < S:
+        # keep last `window` entries, arranged so slot = pos % window
+        kw, vw = k[:, -window:], v[:, -window:]
+        shift = S % window
+        kw = jnp.roll(kw, shift, axis=1)
+        vw = jnp.roll(vw, shift, axis=1)
+        cache = {"k": kw, "v": vw}
+    else:
+        cache = {"k": k, "v": v}
+    return out.reshape(B, S, -1) @ p["wo"], cache
+
+
+def attn_decode(p, x, pos, cfg, cache, *, window: Optional[int] = None):
+    """One-token decode.  x: (B, 1, D); pos: scalar absolute position.
+
+    The cache is a ring buffer when ``window`` is set (slot = pos % window),
+    else a linear buffer indexed by absolute position.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+    cache_len = cache["k"].shape[1]
+    slot = (pos % cache_len) if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    # valid entries: min(pos+1, cache_len)
+    length = jnp.minimum(pos + 1, cache_len)
+    lengths = jnp.full((B,), length, jnp.int32)
+    out = ops.decode_attention(q, k_cache, v_cache, lengths)
+    y = out.reshape(B, 1, H * hd) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,99 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+The block: in_proj -> (z, x, B, C, dt) -> causal conv on (x,B,C) -> SiLU ->
+chunked SSD scan -> gated RMSNorm -> out_proj.  ngroups = 1 (B/C shared
+across heads).  Decode keeps a constant-size recurrent state — the reason
+`long_500k` is native for this architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import causal_conv1d, conv1d_decode_step, dense_init, \
+    dtype_of, rms_norm
+
+
+def init_mamba2(cfg, key):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * s.d_state
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * s.d_state + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+                   * (1.0 / s.conv_width)).astype(dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": dense_init(ks[2], di, d, dt),
+    }
+
+
+def _split_proj(p, x, cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, di, nh
+
+
+def mamba2_forward(p, x, cfg, *, return_cache=False):
+    """x: (B, S, D) -> (B, S, D).  Full-sequence chunked SSD."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    z, xbc, dt, di, nh = _split_proj(p, x, cfg)
+    xbc, conv_cache = causal_conv1d(xbc, p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    chunk = min(s.chunk_size, S)
+    while S % chunk:
+        chunk //= 2
+    y, state = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=max(chunk, 1))
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        return out, {"state": state, "conv": conv_cache}
+    return out
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    return {
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * s.d_state), dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg, cache):
+    """One-token step.  x: (B, 1, D)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xbc, dt, di, nh = _split_proj(p, x[:, 0], cfg)
+    xbc, conv_cache = conv1d_decode_step(xbc, p["conv_w"], cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B, nh, s.head_dim)
+    y, state = ops.ssd_decode_step(xh, dt, A, Bm, Cm, cache["state"])
+    y = y + xh * p["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"state": state, "conv": conv_cache}

@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Prefill/train use the decompressed form through the shared flash-attention
+kernel.  Decode uses the *absorbed-matmul* form: the KV cache stores only
+the compressed latent ``c_kv`` (kv_lora_rank) plus the shared RoPE key, and
+``W_uk``/``W_uv`` are absorbed into the query/output projections — the
+memory saving that makes MLA serve long contexts cheaply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import apply_rope, dense_init, dtype_of, rms_norm
+
+
+def init_mla(cfg, key):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * qk, dt),
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dt),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.qk_nope_head_dim, dt),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim, dt),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dt),
+    }
+    return p
+
+
+def _latents(p, x, positions, cfg):
+    """Shared query/latent computation.  Returns q_nope, q_rope, c_kv, k_rope."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = (x @ p["wq"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p, x, positions, cfg, *, window=None, return_cache=False):
+    """Full-sequence MLA (decompressed form)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, positions, cfg)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    from repro.models.attention import full_attention
+    out = full_attention(q, k, v, window=window, scale=scale)
+    y = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    if return_cache:
+        return y, {"ckv": c_kv, "krope": k_rope}
+    return y
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, pos, cfg, cache, *, window=None):
+    """Absorbed-matmul decode: attention in the latent space.
+
+    score[t] = q_nope^T W_uk c_kv[t] + q_rope^T k_rope[t]
+    out      = (softmax @ c_kv) W_uv
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latents(p, x, positions, cfg)
+
+    cache_len = cache["ckv"].shape[1]
+    slot = (pos % cache_len) if window is not None else pos
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new, slot, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], kr_new, slot, axis=1)
+
+    # absorb W_uk into q: (B,1,H,nope) @ (R,H*nope->R per head)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)       # (B,H,R)
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                      krope.astype(jnp.float32))) * scale
+    length = jnp.minimum(pos + 1, cache_len)
+    mask = jnp.arange(cache_len)[None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))  # (B,H,R)
+
+    # absorb W_uv on the way out
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    y = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return y, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,324 @@
+"""Unified causal LM covering every assigned architecture.
+
+The stack is organised as **segments**: a segment is a macro-block of one
+or more (mixer, ffn) sub-layers repeated ``repeat`` times with parameters
+stacked on a leading axis and executed under ``jax.lax.scan`` (so the HLO
+contains each distinct layer body once — essential for 40-80 layer configs
+to compile quickly, and the natural shape for HyperOffload's layer
+streaming).  Heterogeneous stacks (MoE first-k-dense, RecurrentGemma's
+1:2 pattern) become multiple segments.
+
+Modes:
+  forward(..., mode="train")    -> logits, None, metrics
+  forward(..., mode="prefill")  -> logits, caches, metrics
+  decode_step(...)              -> logits, new caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, DENSE_FFN, LOCAL_ATTN, MLA, MOE_FFN, RGLRU, SSD
+from repro.core.meshctx import constrain
+from repro.models import attention, mamba2 as m2, mla as mla_mod, moe as moe_mod, \
+    rglru as rg_mod
+from repro.models.common import dense_init, dtype_of, embed_init, rms_norm, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kinds: Tuple[Tuple[str, str], ...]   # (mixer, ffn) per sub-layer in the macro block
+    repeat: int
+
+
+def segments(cfg) -> Tuple[Segment, ...]:
+    kinds = cfg.block_kinds()
+    if cfg.family == "hybrid":
+        pat = len(cfg.rglru.block_pattern)
+        n_macro, tail = cfg.num_layers // pat, cfg.num_layers % pat
+        segs = [Segment(tuple(kinds[:pat]), n_macro)]
+        if tail:
+            segs.append(Segment(tuple(kinds[n_macro * pat:]), 1))
+        return tuple(segs)
+    # otherwise: group maximal runs of identical (mixer, ffn)
+    segs = []
+    run_kind, run_len = kinds[0], 0
+    for kd in kinds:
+        if kd == run_kind:
+            run_len += 1
+        else:
+            segs.append(Segment((run_kind,), run_len))
+            run_kind, run_len = kd, 1
+    segs.append(Segment((run_kind,), run_len))
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# per-sublayer init / forward / decode
+# ---------------------------------------------------------------------------
+def _init_sublayer(cfg, kind, key):
+    mixer, ffn = kind
+    d = cfg.d_model
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p: dict = {"norm1": jnp.zeros((d,), dt)}
+    if mixer in (ATTN, LOCAL_ATTN):
+        p["attn"] = attention.init_attention(cfg, ks[0])
+    elif mixer == MLA:
+        p["attn"] = mla_mod.init_mla(cfg, ks[0])
+    elif mixer == SSD:
+        p["mixer"] = m2.init_mamba2(cfg, ks[0])
+    elif mixer == RGLRU:
+        p["mixer"] = rg_mod.init_rglru(cfg, ks[0])
+    if ffn == DENSE_FFN:
+        p["norm2"] = jnp.zeros((d,), dt)
+        p["ffn"] = {
+            "w_gate": dense_init(ks[1], d, cfg.d_ff, dt),
+            "w_up": dense_init(jax.random.fold_in(ks[1], 1), d, cfg.d_ff, dt),
+            "w_down": dense_init(jax.random.fold_in(ks[1], 2), cfg.d_ff, d, dt),
+        }
+    elif ffn == MOE_FFN:
+        p["norm2"] = jnp.zeros((d,), dt)
+        p["ffn"] = moe_mod.init_moe(cfg, ks[2])
+    return p
+
+
+def _resolve_window(cfg, mixer, window_override):
+    if mixer == LOCAL_ATTN:
+        return cfg.sliding_window
+    return window_override           # None => full attention
+
+
+def _zero_metrics():
+    return {"moe_aux_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0)}
+
+
+def _sublayer_forward(p, x, positions, cfg, kind, *, mode, window_override,
+                      moe_dispatch):
+    mixer, ffn = kind
+    want_cache = mode == "prefill"
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    cache = None
+    w = _resolve_window(cfg, mixer, window_override)
+    if mixer in (ATTN, LOCAL_ATTN):
+        if want_cache:
+            y, cache = attention.attn_prefill(p["attn"], h, positions, cfg, window=w)
+        else:
+            y = attention.attn_forward(p["attn"], h, positions, cfg, window=w)
+    elif mixer == MLA:
+        if want_cache:
+            y, cache = mla_mod.mla_forward(p["attn"], h, positions, cfg,
+                                           window=w, return_cache=True)
+        else:
+            y = mla_mod.mla_forward(p["attn"], h, positions, cfg, window=w)
+    elif mixer == SSD:
+        if want_cache:
+            y, cache = m2.mamba2_forward(p["mixer"], h, cfg, return_cache=True)
+        else:
+            y = m2.mamba2_forward(p["mixer"], h, cfg)
+    elif mixer == RGLRU:
+        if want_cache:
+            y, cache = rg_mod.rglru_forward(p["mixer"], h, cfg, return_cache=True)
+        else:
+            y = rg_mod.rglru_forward(p["mixer"], h, cfg)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    metrics = _zero_metrics()
+    if ffn == DENSE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+    elif ffn == MOE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, mm = moe_mod.moe_forward(p["ffn"], h, cfg, dispatch=moe_dispatch)
+        x = x + y
+        metrics["moe_aux_loss"] = mm["moe_aux_loss"]
+        metrics["moe_z_loss"] = mm["moe_z_loss"]
+    return x, cache, metrics
+
+
+def _sublayer_decode(p, x, pos, cfg, kind, cache, *, window_override,
+                     moe_dispatch):
+    mixer, ffn = kind
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    w = _resolve_window(cfg, mixer, window_override)
+    if mixer in (ATTN, LOCAL_ATTN):
+        y, cache = attention.attn_decode(p["attn"], h, pos, cfg, cache, window=w)
+    elif mixer == MLA:
+        y, cache = mla_mod.mla_decode(p["attn"], h, pos, cfg, cache, window=w)
+    elif mixer == SSD:
+        y, cache = m2.mamba2_decode(p["mixer"], h, cfg, cache)
+    elif mixer == RGLRU:
+        y, cache = rg_mod.rglru_decode(p["mixer"], h, cfg, cache)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if ffn == DENSE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+    elif ffn == MOE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_forward(p["ffn"], h, cfg, dispatch=moe_dispatch)
+        x = x + y
+    return x, cache
+
+
+def _init_sublayer_cache(cfg, kind, batch, cache_len, dtype, window_override):
+    mixer, _ = kind
+    w = _resolve_window(cfg, mixer, window_override)
+    eff_len = min(cache_len, w) if w is not None else cache_len
+    if mixer in (ATTN, LOCAL_ATTN):
+        return attention.init_kv_cache(cfg, batch, eff_len, dtype)
+    if mixer == MLA:
+        return mla_mod.init_mla_cache(cfg, batch, eff_len, dtype)
+    if mixer == SSD:
+        return m2.init_mamba2_cache(cfg, batch, dtype)
+    if mixer == RGLRU:
+        return rg_mod.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+def init_model(cfg, key):
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 4 + len(segments(cfg)))
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(keys[1], cfg.padded_vocab, cfg.d_model, dt)
+    if cfg.frontend_dim:
+        params["frontend_proj"] = dense_init(keys[2], cfg.frontend_dim,
+                                             cfg.d_model, dt)
+    for si, seg in enumerate(segments(cfg)):
+        def one(k):
+            sks = jax.random.split(k, len(seg.kinds))
+            return tuple(_init_sublayer(cfg, kd, sk)
+                         for kd, sk in zip(seg.kinds, sks))
+        params[f"seg{si}"] = jax.vmap(one)(
+            jax.random.split(keys[3 + si], seg.repeat))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg, *, prefix_embeds=None, mode="train",
+            window_override=None, moe_dispatch="gshard", remat=True,
+            unroll=False):
+    """tokens: (B, S) int32.  Returns (logits (B,S,V_pad), caches|None, metrics)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    P_len = 0
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        P_len = pe.shape[1]
+    x = constrain(x, ("pod", "data"), None, None)
+    positions = jnp.arange(P_len + S)
+
+    metrics = _zero_metrics()
+    caches = {}
+
+    for si, seg in enumerate(segments(cfg)):
+        def body2(carry, layer_params, _seg=seg):
+            h, acc = carry
+            h = constrain(h, ("pod", "data"), "model", None)
+            lcaches = []
+            for sub_p, kd in zip(layer_params, _seg.kinds):
+                h, c, mm = _sublayer_forward(
+                    sub_p, h, positions, cfg, kd, mode=mode,
+                    window_override=window_override, moe_dispatch=moe_dispatch)
+                lcaches.append(c)
+                acc = jax.tree.map(lambda a, b: a + b, acc, mm)
+            return (h, acc), (tuple(lcaches) if mode == "prefill" else None)
+
+        fn = jax.checkpoint(body2) if (remat and mode == "train") else body2
+        if unroll:
+            # python loop (used by the dry-run's depth-scaled cost probes:
+            # XLA cost_analysis counts while bodies once, so rolled scans
+            # can't be cost-extrapolated)
+            outs = []
+            for li in range(seg.repeat):
+                lp = jax.tree.map(lambda a: a[li], params[f"seg{si}"])
+                (x, metrics), out = fn((x, metrics), lp)
+                outs.append(out)
+            seg_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                          if mode == "prefill" else None)
+        else:
+            (x, metrics), seg_caches = jax.lax.scan(fn, (x, metrics),
+                                                    params[f"seg{si}"])
+        if mode == "prefill":
+            caches[f"seg{si}"] = seg_caches
+
+    x = constrain(x, ("pod", "data"), "model", None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if P_len:
+        x = x[:, P_len:]
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.T
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, (caches if mode == "prefill" else None), metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_caches(cfg, batch, cache_len, *, dtype=None, window_override=None):
+    """Cache pytree matching decode_step's expectations (stacked per segment)."""
+    dt = dtype or dtype_of(cfg)
+    caches = {}
+    for si, seg in enumerate(segments(cfg)):
+        one = tuple(_init_sublayer_cache(cfg, kd, batch, cache_len, dt,
+                                         window_override)
+                    for kd in seg.kinds)
+        # stack `repeat` copies on a leading layer axis (broadcast of zeros)
+        caches[f"seg{si}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (seg.repeat,) + x.shape), one)
+    return caches
+
+
+def decode_step(params, token, pos, cfg, caches, *, window_override=None,
+                moe_dispatch="gshard", unroll=False):
+    """token: (B, 1) int32; pos: scalar int32.  Returns (logits (B,1,V), caches)."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    x = constrain(x, ("pod", "data"), None, None)
+
+    new_caches = {}
+    for si, seg in enumerate(segments(cfg)):
+        def body(h, xs, _seg=seg):
+            layer_params, layer_cache = xs
+            lcaches = []
+            for sub_p, kd, c in zip(layer_params, _seg.kinds, layer_cache):
+                h, c2 = _sublayer_decode(sub_p, h, pos, cfg, kd, c,
+                                         window_override=window_override,
+                                         moe_dispatch=moe_dispatch)
+                lcaches.append(c2)
+            return h, tuple(lcaches)
+
+        if unroll:
+            outs = []
+            for li in range(seg.repeat):
+                xs_i = jax.tree.map(lambda a: a[li],
+                                    (params[f"seg{si}"], caches[f"seg{si}"]))
+                x, out = body(x, xs_i)
+                outs.append(out)
+            seg_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, seg_caches = jax.lax.scan(body, x, (params[f"seg{si}"],
+                                                   caches[f"seg{si}"]))
+        new_caches[f"seg{si}"] = seg_caches
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.T
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, new_caches

@@ -1,0 +1,75 @@
+"""RecurrentGemma temporal block: RG-LRU recurrence (arXiv:2402.19427).
+
+Block: (x-branch: linear -> causal conv -> RG-LRU) * (gate-branch:
+linear -> GeLU) -> out projection.  Local-attention layers in the 1:2
+pattern reuse :mod:`repro.models.attention` with a sliding window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import causal_conv1d, conv1d_decode_step, dense_init, \
+    dtype_of
+
+
+def init_rglru(cfg, key):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, w, dt),
+        "w_gate": dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (r.conv_width, w), jnp.float32)
+                   * (1.0 / r.conv_width)).astype(dt),
+        "w_input_gate": dense_init(ks[3], w, w, dt),
+        "w_a_gate": dense_init(ks[4], w, w, dt),
+        # a = sigmoid(lambda) in (0,1); init so a^c ~ 0.9..0.999
+        "lambda": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dt),
+    }
+
+
+def _log_a(p):
+    # log a = log sigmoid(lambda) = -softplus(-lambda)  (<= 0)
+    return -jax.nn.softplus(-p["lambda"])
+
+
+def rglru_forward(p, x, cfg, *, return_cache=False):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    xb, conv_cache = causal_conv1d(xb, p["conv_w"])
+    ig = jax.nn.sigmoid(xb @ p["w_input_gate"])
+    ag = jax.nn.sigmoid(xb @ p["w_a_gate"])
+    h, state = ops.rglru_scan(xb, ig, ag, _log_a(p))
+    y = (h * gate) @ p["w_out"]
+    if return_cache:
+        return y, {"state": state, "conv": conv_cache}
+    return y
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "state": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(p, x, cfg, cache):
+    """One-token step.  x: (B, 1, D)."""
+    B = x.shape[0]
+    x0 = x[:, 0]
+    gate = jax.nn.gelu(x0 @ p["w_gate"])
+    xb = x0 @ p["w_x"]
+    xb, conv_cache = conv1d_decode_step(xb, p["conv_w"], cache["conv"])
+    ig = jax.nn.sigmoid(xb @ p["w_input_gate"])
+    ag = jax.nn.sigmoid(xb @ p["w_a_gate"])
+    h, state = ops.rglru_decode_step(xb, ig, ag, _log_a(p), cache["state"])
+    y = ((h * gate) @ p["w_out"])[:, None, :]
+    return y, {"state": state, "conv": conv_cache}

@@ -1,0 +1,77 @@
+"""AdamW with fp32 moments, pure-functional (no optax dependency).
+
+Moment tensors follow the parameter sharding (ZeRO-style: HyperShard's
+``param_strategy`` already fully shards large params over fsdp+tp axes) and
+may live in host memory under HyperOffload (``opt_state_on_host``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return AdamWState(mu=zeros(params), nu=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, count)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (step_ + decay)
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params, new_mu, new_nu = jax.tree.transpose(
+        jax.tree.structure(params), jax.tree.structure((0, 0, 0)), out)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(new_mu, new_nu, count), metrics

@@ -1,0 +1,190 @@
+"""Serving: prefill + decode steps, batched generation, KV-offload serving.
+
+``make_prefill_step`` / ``make_serve_step`` are the jit'd units the dry-run
+lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` shapes.
+``Generator`` drives them for real token-by-token generation (used by the
+examples and tests).  ``OffloadServer`` is the HyperOffload serving path:
+hierarchical KV pool with host archive (paper's 71K->123K claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hypershard
+from repro.core.meshctx import use_mesh
+from repro.models import model as M
+
+
+def make_prefill_step(cfg, mesh: Optional[Mesh], plan, *, multimodal=False,
+                      unroll=False, batch: Optional[int] = None,
+                      seq_len: Optional[int] = None,
+                      moe_dispatch: str = "gshard"):
+    def prefill(params, tokens, prefix_embeds=None):
+        ctx = use_mesh(mesh) if mesh is not None else _null()
+        with ctx:
+            logits, caches, _ = M.forward(params, tokens, cfg,
+                                          prefix_embeds=prefix_embeds,
+                                          mode="prefill", remat=False,
+                                          unroll=unroll,
+                                          moe_dispatch=moe_dispatch)
+        return logits, caches
+    if mesh is None:
+        return jax.jit(prefill), {}
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    param_sh = hypershard.make_param_shardings(mesh, pshapes, plan)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tok_sh = NamedSharding(mesh, P(dp_entry, None))
+
+    out_sh = None
+    if batch is not None and seq_len is not None:
+        # derive output shardings so the returned KV caches (and logits)
+        # come out sharded like the decode step expects — without this the
+        # caches replicate over the model axis and blow past HBM for the
+        # 32K-prefill shapes
+        toks = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        pe = (jax.ShapeDtypeStruct((batch, cfg.num_prefix_tokens,
+                                    cfg.frontend_dim), jnp.bfloat16)
+              if multimodal else None)
+        _, cshapes = jax.eval_shape(prefill, pshapes, toks, pe)
+        cache_sh = hypershard.make_cache_shardings(mesh, cshapes, plan,
+                                                   batch=batch)
+        logits_sh = NamedSharding(mesh, P(dp_entry, None, "model"))
+        out_sh = (logits_sh, cache_sh)
+
+    if multimodal:
+        pe_sh = NamedSharding(mesh, P(dp_entry, None, None))
+        in_sh = (param_sh, tok_sh, pe_sh)
+    else:
+        in_sh = (param_sh, tok_sh)
+    return jax.jit(prefill, in_shardings=in_sh,
+                   out_shardings=out_sh), {"params": param_sh}
+
+
+def make_serve_step(cfg, mesh: Optional[Mesh], plan, *, batch: int,
+                    cache_len: int, window_override: Optional[int] = None,
+                    donate: bool = True, unroll: bool = False,
+                    moe_dispatch: str = "gshard"):
+    """One-token decode step against a cache of ``cache_len``."""
+
+    def serve(params, token, pos, caches):
+        ctx = use_mesh(mesh) if mesh is not None else _null()
+        with ctx:
+            logits, new_caches = M.decode_step(
+                params, token, pos, cfg, caches,
+                window_override=window_override, unroll=unroll,
+                moe_dispatch=moe_dispatch)
+        return logits, new_caches
+
+    if mesh is None:
+        return jax.jit(serve, donate_argnums=(3,) if donate else ()), {}
+
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    param_sh = hypershard.make_param_shardings(mesh, pshapes, plan)
+    cshapes = jax.eval_shape(lambda: M.init_caches(
+        cfg, batch, cache_len, window_override=window_override))
+    cache_sh = hypershard.make_cache_shardings(mesh, cshapes, plan, batch=batch)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tok_sh = NamedSharding(mesh, P(dp_entry, None) if batch % _n(mesh, dp) == 0
+                           else P(None, None))
+    pos_sh = NamedSharding(mesh, P())
+    step = jax.jit(serve,
+                   in_shardings=(param_sh, tok_sh, pos_sh, cache_sh),
+                   out_shardings=(None, cache_sh),
+                   donate_argnums=(3,) if donate else ())
+    return step, {"params": param_sh, "caches": cache_sh, "tokens": tok_sh}
+
+
+def _n(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+@dataclasses.dataclass
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 => greedy
+    seed: int = 0
+
+
+class Generator:
+    """Host-side prefill+decode driver."""
+
+    def __init__(self, cfg, params, *, mesh=None, plan=None, max_len=512,
+                 window_override=None):
+        self.cfg = cfg
+        self.params = params
+        plan = plan or hypershard.ShardingPlan()
+        self.prefill_fn, _ = make_prefill_step(cfg, mesh, plan)
+        self.max_len = max_len
+        self.window_override = window_override
+        self._serve = {}
+        self.mesh = mesh
+        self.plan = plan
+
+    def _serve_fn(self, batch):
+        if batch not in self._serve:
+            self._serve[batch], _ = make_serve_step(
+                self.cfg, self.mesh, self.plan, batch=batch,
+                cache_len=self.max_len, window_override=self.window_override,
+                donate=False)
+        return self._serve[batch]
+
+    def generate(self, tokens, gen: GenerateConfig = GenerateConfig()):
+        """tokens: (B, S) prompt. Returns (B, S + max_new) tokens."""
+        B, S = tokens.shape
+        cfg = self.cfg
+        # prefill the prompt, then re-seat the prefill cache into a decode
+        # cache of max_len (prefill cache covers S positions)
+        logits, pcaches = self.prefill_fn(self.params, tokens)
+        caches = M.init_caches(cfg, B, self.max_len,
+                               window_override=self.window_override)
+        caches = _seat(caches, pcaches, S, self.window_override, cfg)
+        out = [tokens]
+        key = jax.random.PRNGKey(gen.seed)
+        last = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
+        step_fn = self._serve_fn(B)
+        cur = last.astype(jnp.int32)
+        out.append(cur)
+        for i in range(gen.max_new_tokens - 1):
+            pos = jnp.int32(S + i)
+            logits, caches = step_fn(self.params, cur, pos, caches)
+            lg = logits[:, -1, :cfg.vocab_size]
+            if gen.temperature > 0:
+                key, sk = jax.random.split(key)
+                cur = jax.random.categorical(sk, lg / gen.temperature)[:, None]
+            else:
+                cur = jnp.argmax(lg, axis=-1)[:, None]
+            cur = cur.astype(jnp.int32)
+            out.append(cur)
+        return jnp.concatenate(out, axis=1)
+
+
+def _seat(dcaches, pcaches, S, window_override, cfg):
+    """Copy prefill caches into the (larger) decode cache buffers."""
+    def seat_leaf(d, p):
+        if d.ndim >= 4 and p.ndim == d.ndim:      # (L, B, S, ...) style
+            n = min(p.shape[2], d.shape[2])
+            return jax.lax.dynamic_update_slice_in_dim(
+                d, p[:, :, -n:].astype(d.dtype), 0, axis=2)
+        if d.shape == p.shape:
+            return p.astype(d.dtype)
+        return d
+    return jax.tree.map(seat_leaf, dcaches, pcaches)

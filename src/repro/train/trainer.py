@@ -1,0 +1,66 @@
+"""Training loop: data -> step -> metrics -> checkpoints."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint
+from repro.core import hypershard, offload as off
+from repro.data.pipeline import DataConfig, make_loader
+from repro.optim.adamw import AdamWConfig
+from repro.train import steps as steps_mod
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    num_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                 # 0 => disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+
+def train(cfg, shape, *, mesh=None, plan=None, adamw: Optional[AdamWConfig] = None,
+          train_cfg: TrainConfig = TrainConfig(),
+          offload_cfg: off.OffloadConfig = off.OffloadConfig(),
+          moe_dispatch: str = "gshard",
+          hook: Optional[Callable] = None):
+    """End-to-end training. Returns (params, history)."""
+    adamw = adamw or AdamWConfig(total_steps=train_cfg.num_steps)
+    plan = plan or hypershard.ShardingPlan()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                      global_batch=shape.global_batch, seed=train_cfg.seed)
+
+    step_fn, shardings = steps_mod.make_train_step(
+        cfg, mesh, plan, adamw, offload_cfg=offload_cfg,
+        moe_dispatch=moe_dispatch)
+    params, opt = steps_mod.init_state(cfg, mesh, plan, seed=train_cfg.seed,
+                                       offload_cfg=offload_cfg)
+
+    loader = make_loader(dcfg, mesh)
+    history = []
+    needs_offload = mesh is not None and (offload_cfg.params_on_host
+                                          or offload_cfg.opt_state_on_host)
+    t0 = time.perf_counter()
+    for i, batch in zip(range(train_cfg.num_steps), loader):
+        if needs_offload:
+            params, opt = steps_mod.fetch_state(params, opt, shardings,
+                                                offload_cfg)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if needs_offload:
+            params, opt = steps_mod.offload_state(params, opt, shardings,
+                                                  offload_cfg)
+        if (i + 1) % train_cfg.log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            if hook:
+                hook(m)
+        if train_cfg.ckpt_every and (i + 1) % train_cfg.ckpt_every == 0:
+            checkpoint.save(train_cfg.ckpt_dir, i + 1, params, opt)
+    return params, history

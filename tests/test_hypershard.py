@@ -1,0 +1,134 @@
+"""HyperShard strategy derivation: rules, fallback, cache shardings."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.core.hypershard import (ShardingPlan, cache_strategy,
+                                   param_strategy, roles_for_path, spec_tree)
+from repro.core.layout import Layout
+
+LAYOUT = Layout((2, 16, 16), ("pod", "data", "model"))
+PLAN = ShardingPlan()
+INFER = ShardingPlan(fsdp=None)
+
+
+def spec(path, shape, plan=PLAN, layout=LAYOUT):
+    return param_strategy(path, shape, layout, plan).partition_spec()
+
+
+def test_attention_weights():
+    assert spec("seg0/0/attn/wq", (24, 2048, 2048)) == \
+        P(None, ("pod", "data"), "model")
+    assert spec("seg0/0/attn/wo", (24, 2048, 2048)) == \
+        P(None, "model", ("pod", "data"))
+
+
+def test_divisibility_fallback_drops_axes():
+    # 2048 divides 32 (pod*data) but a dim of 100 does not -> replicate
+    assert spec("seg0/0/attn/wq", (24, 100, 2048)) == P(None, None, "model")
+    # tp dim not divisible -> replicated
+    assert spec("seg0/0/attn/wq", (24, 2048, 100)) == \
+        P(None, ("pod", "data"), None)
+
+
+def test_moe_expert_weights():
+    assert spec("seg1/0/ffn/w_gate", (26, 64, 2048, 1408)) == \
+        P(None, "model", ("pod", "data"), None)
+    assert spec("seg1/0/ffn/w_down", (26, 64, 1408, 2048)) == \
+        P(None, "model", None, ("pod", "data"))
+    assert spec("seg1/0/ffn/router", (26, 2048, 64)) == P(None, None, None)
+
+
+def test_vocab_sharding():
+    assert spec("embed", (49408, 2048)) == P("model", ("pod", "data"))
+    assert spec("embed", (49408, 2048), plan=INFER) == P("model", None)
+
+
+def test_norms_replicated():
+    assert spec("seg0/0/norm1", (24, 2048)) == P(None, None)
+    assert spec("final_norm", (2048,)) == P(None)
+
+
+def test_whole_model_trees_have_valid_specs():
+    """Every param of every arch gets a spec that divides its shape."""
+    from repro.configs.base import list_archs
+    for arch in list_archs():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda c=cfg: __import__("repro.models.model", fromlist=["m"])
+            .init_model(c, jax.random.PRNGKey(0)))
+        specs = spec_tree_like(shapes)
+        for leaf_spec, leaf in zip(jax.tree.leaves(specs,
+                                                   is_leaf=lambda x: isinstance(x, P)),
+                                   jax.tree.leaves(shapes)):
+            _check_divides(leaf_spec, leaf.shape, arch)
+
+
+def spec_tree_like(shapes):
+    import repro.core.hypershard as hs
+    from repro.launch.mesh import make_production_mesh
+    # use layout directly (no devices needed)
+    paths, leaves, treedef = hs.tree_paths(shapes)
+    specs = [hs.param_strategy(p, tuple(l.shape), LAYOUT, PLAN).partition_spec()
+             for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _check_divides(pspec, shape, arch):
+    for dim, entry in zip(shape, tuple(pspec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        n = 1
+        for a in axes:
+            n *= LAYOUT.axis_size(a)
+        assert dim % n == 0, (arch, pspec, shape)
+
+
+# ---------------------------------------------------------------------------
+# cache strategies
+# ---------------------------------------------------------------------------
+def test_kv_cache_batch_and_heads():
+    # kv=16 divides tp -> heads sharded; batch 128 divides dp 32
+    s = cache_strategy("seg0/0/k", (27, 128, 32768, 16, 128), LAYOUT, PLAN,
+                       batch=128)
+    assert s.partition_spec() == P(None, ("pod", "data"), None, "model", None)
+
+
+def test_kv_cache_seq_fallback():
+    # kv=2 doesn't divide tp=16 -> sequence takes the model axis
+    s = cache_strategy("seg0/0/k", (24, 128, 32768, 2, 64), LAYOUT, PLAN,
+                       batch=128)
+    assert s.partition_spec() == P(None, ("pod", "data"), "model", None, None)
+
+
+def test_kv_cache_context_parallel_batch1():
+    # batch=1: sequence absorbs dp AND tp (context-parallel flash decode)
+    s = cache_strategy("seg0/0/k", (24, 1, 8192, 2, 64), LAYOUT, PLAN, batch=1)
+    assert s.partition_spec() == P(None, None, ("pod", "data", "model"),
+                                   None, None)
+
+
+def test_mla_cache():
+    s = cache_strategy("seg1/0/ckv", (26, 128, 32768, 512), LAYOUT, PLAN,
+                       batch=128)
+    assert s.partition_spec() == P(None, ("pod", "data"), "model", None)
+
+
+def test_ssm_state():
+    s = cache_strategy("seg0/0/state", (48, 128, 32, 64, 128), LAYOUT, PLAN,
+                       batch=128)
+    assert s.partition_spec() == P(None, ("pod", "data"), "model", None, None)
+
+
+@given(st.integers(1, 512), st.integers(1, 64), st.integers(6, 20))
+@settings(max_examples=100, deadline=None)
+def test_cache_strategy_always_divides(batch, kv, log_seq):
+    """Property: derived cache shardings always divide the shape."""
+    seq = 2 ** log_seq
+    shape = (24, batch, seq, kv, 64)
+    s = cache_strategy("seg0/0/k", shape, LAYOUT, PLAN, batch=batch)
+    assert s.divisible(shape)

@@ -1,0 +1,169 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 3e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+def _mx(a, b):
+    return float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,window", [
+    ((2, 256, 4, 2, 64), None),
+    ((1, 512, 8, 8, 32), None),
+    ((2, 256, 6, 2, 64), 128),
+    ((1, 128, 2, 1, 64), None),
+    ((1, 128, 4, 4, 128), 64),
+])
+def test_flash_attention(shape, window, dtype):
+    B, S, H, KV, D = shape
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, S, H, D)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, KV, D)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, KV, D)) * 0.3).astype(dtype)
+    out = flash_attention(q, k, v, window=window, interpret=True,
+                          block_q=128, block_k=128)
+    exp = ref.flash_attention(q, k, v, window=window)
+    assert out.shape == exp.shape and out.dtype == dtype
+    assert _mx(out, exp) < _tol(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D", [(2, 512, 4, 2, 64), (1, 1024, 8, 8, 32),
+                                        (2, 256, 2, 1, 128)])
+def test_decode_attention(B, S, H, KV, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = (jax.random.normal(ks[0], (B, 1, H, D)) * 0.3).astype(dtype)
+    kc = (jax.random.normal(ks[1], (B, S, KV, D)) * 0.3).astype(dtype)
+    vc = (jax.random.normal(ks[2], (B, S, KV, D)) * 0.3).astype(dtype)
+    lens = jnp.full((B,), S // 2, jnp.int32)
+    out = decode_attention(q, kc, vc, lens, interpret=True, block_s=128)
+    exp = ref.decode_attention(q, kc, vc, lens)
+    assert _mx(out, exp) < _tol(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D,F,E", [(512, 64, 128, 4), (1024, 128, 64, 8),
+                                     (256, 256, 256, 2)])
+def test_grouped_matmul(T, D, F, E, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = (jax.random.normal(ks[0], (T, D)) * 0.3).astype(dtype)
+    w = (jax.random.normal(ks[1], (E, D, F)) * 0.3).astype(dtype)
+    sizes = jax.random.randint(jax.random.PRNGKey(7), (E,), 0, 2 * T // E)
+    sizes = sizes.at[-1].add(T - sizes.sum())
+    out = grouped_matmul(x, w, sizes, interpret=True, block_t=128)
+    exp = ref.grouped_matmul(x, w, sizes)
+    assert _mx(out, exp) < _tol(dtype)
+
+
+def test_grouped_matmul_empty_groups():
+    x = jnp.ones((128, 32), jnp.float32)
+    w = jnp.ones((4, 32, 16), jnp.float32)
+    sizes = jnp.array([0, 128, 0, 0], jnp.int32)
+    out = grouped_matmul(x, w, sizes, interpret=True, block_t=64)
+    exp = ref.grouped_matmul(x, w, sizes)
+    assert _mx(out, exp) < 1e-5
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [(2, 256, 4, 32, 16, 64),
+                                         (1, 128, 2, 64, 32, 32),
+                                         (2, 64, 8, 16, 8, 16)])
+def test_ssd_scan(B, S, H, P, N, Q):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y1, f1 = ssd_scan(x, dt, A, Bm, Cm, chunk=Q, interpret=True)
+    y2, f2 = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=Q)
+    assert _mx(y1, y2) < 1e-3 and _mx(f1, f2) < 1e-3
+
+
+def test_ssd_chunk_invariance():
+    """Oracle: result independent of chunk size (the SSD identity)."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y16, f16 = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=16)
+    y64, f64 = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=64)
+    assert _mx(y16, y64) < 1e-4 and _mx(f16, f64) < 1e-4
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Oracle vs literal h_t = exp(dt A) h + dt B x recurrence."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y, fin = ref.ssd_scan(x, dt, A, Bm, Cm, chunk=8)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        yt, state = ref.ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t],
+                                        Cm[:, t], state)
+        ys.append(yt)
+    y_seq = jnp.stack(ys, axis=1)
+    assert _mx(y, y_seq) < 1e-4 and _mx(fin, state) < 1e-4
+
+
+@pytest.mark.parametrize("B,S,W", [(2, 256, 128), (1, 128, 64), (2, 64, 256)])
+def test_rglru_scan(B, S, W):
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (B, S, W), jnp.float32) * 0.5
+    ig = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, W)))
+    ag = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, W)))
+    la = -jax.nn.softplus(-jnp.linspace(2, 6, W))
+    h1, f1 = rglru_scan(x, ig, ag, la, interpret=True, block_s=64)
+    h2, f2 = ref.rglru_scan(x, ig, ag, la)
+    assert _mx(h1, h2) < 1e-4 and _mx(f1, f2) < 1e-4
+
+
+def test_rglru_matches_sequential():
+    ks = jax.random.split(KEY, 3)
+    B, S, W = 1, 48, 32
+    x = jax.random.normal(ks[0], (B, S, W), jnp.float32) * 0.5
+    ig = jax.nn.sigmoid(jax.random.normal(ks[1], (B, S, W)))
+    ag = jax.nn.sigmoid(jax.random.normal(ks[2], (B, S, W)))
+    la = -jax.nn.softplus(-jnp.linspace(2, 6, W))
+    h, fin = ref.rglru_scan(x, ig, ag, la)
+    state = jnp.zeros((B, W))
+    for t in range(S):
+        ht, state = ref.rglru_decode_step(x[:, t], ig[:, t], ag[:, t], la, state)
+    assert _mx(fin, state) < 1e-4
+    assert _mx(h[:, -1], state) < 1e-4
+
+
+def test_flash_chunk_composability():
+    """flash over [k1;k2] == chunked flash_chunk(k1) then (k2)."""
+    ks = jax.random.split(KEY, 3)
+    B, S, H, KV, D = 1, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 64, H, D)) * 0.3
+    k = jax.random.normal(ks[1], (B, S, KV, D)) * 0.3
+    v = jax.random.normal(ks[2], (B, S, KV, D)) * 0.3
+    full = ref.flash_attention(q, k, v, causal=False)
+    c = ref.flash_chunk(q, k[:, :64], v[:, :64], causal=False, k_offset=0)
+    c = ref.flash_chunk(q, k[:, 64:], v[:, 64:], c, causal=False, k_offset=64)
+    out = ref.flash_finalize(c[0], c[2], q.dtype)
+    assert _mx(full, out) < 1e-5

@@ -1,0 +1,90 @@
+"""HyperShard Layout unit + property tests (paper §3.4 semantics)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.layout import Layout, LayoutError
+
+
+def test_paper_listing2_example():
+    layout = Layout((2, 2), ("x", "y"))
+    strategy = layout("x", "y")
+    assert strategy.partition_spec() == P("x", "y")
+    assert strategy.shard_shape((4, 8)) == (2, 4)
+
+
+def test_multi_axis_dim():
+    layout = Layout((2, 4, 8), ("pod", "data", "model"))
+    s = layout(("pod", "data"), "model")
+    assert s.shard_shape((64, 64)) == (8, 8)
+
+
+def test_replicated_dims():
+    layout = Layout((4,), ("x",))
+    s = layout(None, "x")
+    assert s.partition_spec() == P(None, "x")
+    assert s.shard_shape((3, 8)) == (3, 2)
+
+
+def test_errors():
+    with pytest.raises(LayoutError):
+        Layout((2, 2), ("x",))                    # rank mismatch
+    with pytest.raises(LayoutError):
+        Layout((2, 2), ("x", "x"))                # duplicate alias
+    layout = Layout((2, 2), ("x", "y"))
+    with pytest.raises(LayoutError):
+        layout("z")                               # unknown alias
+    with pytest.raises(LayoutError):
+        layout("x", "x")                          # alias reused
+    with pytest.raises(LayoutError):
+        layout("x").shard_shape((3,))             # indivisible
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+axis_names = st.lists(st.sampled_from(list("abcdefgh")), min_size=1,
+                      max_size=4, unique=True)
+
+
+@st.composite
+def layouts(draw):
+    names = draw(axis_names)
+    sizes = tuple(draw(st.integers(1, 8)) for _ in names)
+    return Layout(sizes, tuple(names))
+
+
+@given(layouts(), st.data())
+@settings(max_examples=200, deadline=None)
+def test_shard_shape_conservation(layout, data):
+    """Total elements are conserved: prod(shard) * num_shards == prod(global)."""
+    rank = data.draw(st.integers(1, 3))
+    # build a valid tensor_map using distinct aliases
+    aliases = list(layout.alias_name)
+    entries = []
+    for _ in range(rank):
+        take = data.draw(st.integers(0, min(2, len(aliases))))
+        picked = tuple(aliases.pop() for _ in range(take))
+        entries.append(picked if len(picked) != 1 else picked[0])
+    strategy = layout(*entries)
+    nper = strategy.shards_per_dim()
+    shape = tuple(n * data.draw(st.integers(1, 5)) for n in nper)
+    shard = strategy.shard_shape(shape)
+    assert math.prod(shard) * math.prod(nper) == math.prod(shape)
+
+
+@given(layouts(), st.data())
+@settings(max_examples=100, deadline=None)
+def test_divisibility_is_checked(layout, data):
+    aliases = [a for a in layout.alias_name if layout.axis_size(a) > 1]
+    if not aliases:
+        return
+    a = data.draw(st.sampled_from(aliases))
+    strategy = layout(a)
+    n = layout.axis_size(a)
+    bad = n * data.draw(st.integers(1, 4)) + data.draw(st.integers(1, n - 1))
+    assert not strategy.divisible((bad,))
+    with pytest.raises(LayoutError):
+        strategy.shard_shape((bad,))

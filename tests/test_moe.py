@@ -1,0 +1,111 @@
+"""MoE: router invariants (hypothesis), dispatch path equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig, get_config
+from repro.models import moe as moe_mod
+
+
+def _cfg(E=4, k=2, cf=8.0):
+    cfg = get_config("deepseek-moe-16b").reduced()
+    return dataclasses.replace(
+        cfg, dtype="float32",
+        moe=dataclasses.replace(cfg.moe, num_experts=E, top_k=k,
+                                capacity_factor=cf))
+
+
+def test_gshard_vs_ragged_dispatch_agree():
+    """With generous capacity (no drops) the two dispatch paths agree."""
+    cfg = _cfg(cf=16.0)
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.3
+    y1, m1 = moe_mod.moe_forward(p, x, cfg, dispatch="gshard")
+    y2, m2 = moe_mod.moe_forward(p, x, cfg, dispatch="ragged")
+    assert float(jnp.abs(y1 - y2).max()) < 1e-3
+    assert abs(float(m1["moe_aux_loss"]) - float(m2["moe_aux_loss"])) < 1e-5
+
+
+def test_capacity_drops_tokens():
+    """With capacity << tokens the gshard path visibly drops routed mass."""
+    cfg = _cfg(cf=0.05)
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.3
+    y_small, _ = moe_mod.moe_forward(p, x, cfg, dispatch="gshard")
+    cfg2 = _cfg(cf=16.0)
+    y_big, _ = moe_mod.moe_forward(p, x, cfg2, dispatch="gshard")
+    assert float(jnp.abs(y_small - y_big).max()) > 1e-4
+
+
+def test_router_gates_normalised():
+    cfg = _cfg()
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    probs, logits = moe_mod.router_probs(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+    gate_vals, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    g = gate_vals / gate_vals.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(g.sum(-1)), 1.0, rtol=1e-5)
+
+
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_aux_loss_bounds(E, k, seed):
+    """Load-balance aux loss >= 1 (perfectly balanced) for any router."""
+    k = min(k, E)
+    T = 64
+    key = jax.random.PRNGKey(seed)
+    probs = jax.nn.softmax(jax.random.normal(key, (T, E)) * 2.0, -1)
+    _, idx = jax.lax.top_k(probs, k)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,))
+    for j in range(k):
+        ce = ce + jnp.mean(jax.nn.one_hot(idx[:, j], E), axis=0)
+    aux = float(E * jnp.sum(me * ce) / k)
+    assert aux >= 0.85           # ~1 balanced, larger when skewed
+
+
+def test_aux_loss_increases_with_imbalance():
+    E, k, T = 4, 1, 256
+    balanced = jnp.ones((T, E)) / E
+    skewed = jnp.concatenate([jnp.full((T, 1), 0.97),
+                              jnp.full((T, E - 1), 0.01)], axis=1)
+
+    def aux(probs):
+        _, idx = jax.lax.top_k(probs, k)
+        me = probs.mean(0)
+        ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E), axis=0)
+        return float(E * jnp.sum(me * ce) / k)
+
+    assert aux(skewed) > 2 * aux(balanced)
+
+
+def test_shared_experts_always_active():
+    """Zeroing every routed expert still yields nonzero output (shared path)."""
+    cfg = _cfg()
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    p = dict(p)
+    for k_ in ("w_gate", "w_up", "w_down"):
+        p[k_] = jnp.zeros_like(p[k_])
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model)) * 0.3
+    y, _ = moe_mod.moe_forward(p, x, cfg)
+    assert float(jnp.abs(y).max()) > 0
+
+
+def test_moe_backward_finite():
+    cfg = _cfg()
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
+
+    def loss(p):
+        y, m = moe_mod.moe_forward(p, x, cfg)
+        return jnp.sum(y ** 2) + m["moe_aux_loss"]
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert jnp.isfinite(leaf).all()

@@ -1,0 +1,117 @@
+"""Serving: generation, windowed decode, KV offload pool."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.kvcache import KVCachePool, KVPoolConfig, combine_partials, \
+    _partial_attn
+from repro.kernels import ref
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m",
+                                  "recurrentgemma-2b", "deepseek-v2-lite-16b"])
+def test_generate_shapes(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    gen = Generator(cfg, params, max_len=64)
+    out = gen.generate(jnp.ones((2, 8), jnp.int32),
+                       GenerateConfig(max_new_tokens=6))
+    assert out.shape == (2, 14)
+    assert (out[:, :8] == 1).all()
+    assert ((out >= 0) & (out < cfg.vocab_size)).all()
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    gen = Generator(cfg, params, max_len=64)
+    toks = jnp.ones((1, 8), jnp.int32)
+    a = gen.generate(toks, GenerateConfig(max_new_tokens=6))
+    b = gen.generate(toks, GenerateConfig(max_new_tokens=6))
+    assert (a == b).all()
+
+
+def test_windowed_decode_matches_full_when_within_window():
+    """Sliding-window decode == full decode while pos < window."""
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              dtype="float32")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    B, S, W = 1, 12, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 3, cfg.vocab_size)
+    full = M.init_caches(cfg, B, S, dtype=jnp.float32)
+    wind = M.init_caches(cfg, B, S, dtype=jnp.float32, window_override=W)
+    for t in range(S):
+        lf, full = M.decode_step(params, toks[:, t:t + 1], jnp.int32(t), cfg,
+                                 full)
+        lw, wind = M.decode_step(params, toks[:, t:t + 1], jnp.int32(t), cfg,
+                                 wind, window_override=W)
+    assert float(jnp.abs(lf - lw).max()) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# HyperOffload KV pool
+# ---------------------------------------------------------------------------
+def test_combine_partials_matches_monolithic():
+    key = jax.random.PRNGKey(0)
+    B, H, KV, D, S = 2, 4, 2, 32, 96
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D)) * 0.3
+    v = jax.random.normal(ks[2], (B, S, KV, D)) * 0.3
+    full, _ = _partial_attn(q, k, v)
+    # full is unnormalised; normalise via combine with itself alone
+    a1, l1 = _partial_attn(q, k[:, :32], v[:, :32])
+    a2, l2 = _partial_attn(q, k[:, 32:64], v[:, 32:64])
+    a3, l3 = _partial_attn(q, k[:, 64:], v[:, 64:])
+    got = combine_partials([a1, a2, a3], [l1, l2, l3])
+    want = ref.decode_attention(q[:, None], k, v,
+                                jnp.full((B,), S, jnp.int32))[:, 0]
+    assert float(jnp.abs(got - want.astype(jnp.float32)).max()) < 1e-4
+
+
+def test_kv_pool_matches_flat_cache():
+    """Pool (hot window + host archive) == flat-cache decode attention."""
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              dtype="float32")
+    pool = KVCachePool(cfg, batch=2, max_len=64,
+                       pool=KVPoolConfig(hot_window=16, block=8,
+                                         dtype="float32"))
+    key = jax.random.PRNGKey(0)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    H = cfg.num_heads
+    ks, kv_flat, v_flat = [], [], []
+    n = 40
+    for t in range(n):
+        kt = jax.random.normal(jax.random.fold_in(key, 2 * t), (2, 1, KV, hd)) * 0.3
+        vt = jax.random.normal(jax.random.fold_in(key, 2 * t + 1), (2, 1, KV, hd)) * 0.3
+        pool.append(kt, vt)
+        kv_flat.append(kt)
+        v_flat.append(vt)
+    q = jax.random.normal(jax.random.fold_in(key, 999), (2, H, hd)) * 0.5
+    got = pool.attend(q)
+    k_all = jnp.concatenate(kv_flat, axis=1)
+    v_all = jnp.concatenate(v_flat, axis=1)
+    want = ref.decode_attention(q[:, None], k_all, v_all,
+                                jnp.full((2,), n, jnp.int32))[:, 0]
+    assert float(jnp.abs(got - want).max()) < 1e-4
+    assert pool.hbm_bytes() < pool.host_bytes()  # most state lives on host
+
+
+def test_kv_pool_memory_accounting():
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              dtype="float32")
+    pool = KVCachePool(cfg, batch=1, max_len=128,
+                       pool=KVPoolConfig(hot_window=8, block=4,
+                                         dtype="float32"))
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    z = jnp.zeros((1, 1, KV, hd))
+    hbm0 = pool.hbm_bytes()
+    for _ in range(64):
+        pool.append(z, z)
+    assert pool.hbm_bytes() == hbm0           # hot window is fixed-size
+    assert pool.host_bytes() > 0              # archive grew

@@ -1,0 +1,102 @@
+"""Training substrate: CE loss, optimizer, trainer loop, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.configs.base import ShapeConfig, get_config
+from repro.models import model as M
+from repro.optim import adamw as opt_mod
+from repro.train import steps as steps_mod
+from repro.train.trainer import TrainConfig, train
+
+
+def test_cross_entropy_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, V, Vp = 2, 8, 11, 16
+    logits = jax.random.normal(key, (B, S, Vp))
+    targets = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (B, S)) > 0.3) \
+        .astype(jnp.float32)
+    got = steps_mod.cross_entropy(logits, targets, mask, V)
+    lp = jax.nn.log_softmax(logits[..., :V], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    want = (nll * mask).sum() / mask.sum()
+    assert abs(float(got) - float(want)) < 1e-5
+
+
+def test_cross_entropy_ignores_padded_vocab():
+    """Huge logits in the padded region must not affect the loss."""
+    B, S, V, Vp = 1, 4, 7, 16
+    logits = jnp.zeros((B, S, Vp)).at[..., V:].set(100.0)
+    targets = jnp.zeros((B, S), jnp.int32)
+    mask = jnp.ones((B, S), jnp.float32)
+    got = float(steps_mod.cross_entropy(logits, targets, mask, V))
+    assert abs(got - float(jnp.log(jnp.float32(V)))) < 1e-4
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt_mod.init_adamw(params)
+    cfg = opt_mod.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                              weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt_mod.adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    params = {"w": jnp.ones((4,))}
+    state = opt_mod.init_adamw(params)
+    cfg = opt_mod.AdamWConfig(grad_clip=1.0, warmup_steps=0)
+    _, _, m = opt_mod.adamw_update({"w": jnp.full((4,), 1e6)}, state, params,
+                                   cfg)
+    assert float(m["grad_norm"]) > 1e5      # reported pre-clip
+
+
+def test_loss_decreases_end_to_end():
+    cfg = get_config("qwen2-0.5b").reduced()
+    shape = ShapeConfig("tiny", 64, 4, "train")
+    _, hist = train(cfg, shape,
+                    train_cfg=TrainConfig(num_steps=30, log_every=5),
+                    adamw=opt_mod.AdamWConfig(lr=1e-3, warmup_steps=5,
+                                              total_steps=30))
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    opt = opt_mod.init_adamw(params)
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, 7, params, opt)
+    assert checkpoint.latest_step(path) == 7
+    p2, o2 = checkpoint.restore(path, 7, params, opt)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    cfg = get_config("qwen2-0.5b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt")
+    checkpoint.save(path, 1, params)
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, d_model=128, head_dim=32)
+    params2 = M.init_model(cfg2, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        checkpoint.restore(path, 1, params2)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = opt_mod.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+    assert float(opt_mod.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5, 1e-3)
+    assert float(opt_mod.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0, 1e-3)
+    assert float(opt_mod.schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, 1e-3)
