@@ -42,3 +42,18 @@ def find_result(data, arch, shape, multi_pod=False):
 
 def row(name, us_per_call, derived):
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def emit_json(filename, payload):
+    """Write a benchmark artifact (e.g. BENCH_serve.json) into results/."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def percentile(values, q):
+    """q-th percentile (0..100) of a sample; 0.0 for an empty one."""
+    import numpy as np
+    return float(np.percentile(list(values), q)) if values else 0.0

@@ -9,11 +9,13 @@ import traceback
 def main() -> None:
     from benchmarks import (hypershard_derive, kernels_bench, mpmd_bubbles,
                             mpmd_overlap, mpmd_rl, offload_serve,
-                            offload_train, roofline)
+                            offload_train, roofline, serve_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("offload_train (paper §3.2 training)", offload_train),
         ("offload_serve (paper §3.2 inference)", offload_serve),
+        ("serve_throughput (HyperServe continuous batching)",
+         serve_throughput),
         ("mpmd_overlap (paper §3.3a)", mpmd_overlap),
         ("mpmd_bubbles (paper §3.3b)", mpmd_bubbles),
         ("mpmd_rl (paper §3.3c)", mpmd_rl),

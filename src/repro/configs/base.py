@@ -210,6 +210,59 @@ class ModelConfig:
 
 
 # ---------------------------------------------------------------------------
+# HyperServe runtime knobs (paper §3.2 paged pool + §3.3 role scheduling)
+@dataclass(frozen=True)
+class ServeConfig:
+    """Serving-runtime configuration, decoupled from the model config.
+
+    Block knobs size the paged HBM KV pool; scheduler knobs bound the
+    continuous batch.  ``max_blocks_per_req`` caps a request's context at
+    ``block_size * max_blocks_per_req`` tokens and fixes the block-table
+    width the jit'd steps compile against.
+    """
+    # paged KV pool
+    block_size: int = 16               # tokens per HBM block
+    num_blocks: int = 128              # pool size (block 0 is the null block)
+    max_blocks_per_req: int = 16       # block-table width (static for jit)
+    dtype: str = ""                    # "" => model dtype
+    # continuous-batching scheduler
+    max_slots: int = 4                 # decode batch seats (static for jit)
+    max_queue: int = 64                # admission control: reject beyond this
+    prefill_chunk: int = 32            # chunked-prefill granularity
+    prefill_chunks_per_step: int = 1   # prefill/decode interleave budget
+    watermark_blocks: int = 1          # admission headroom for decode growth
+    # copy-on-write prompt-prefix sharing
+    enable_prefix_cache: bool = True
+    prefix_cache_blocks: int = 32      # LRU cap on retained blocks
+
+    def replace(self, **kw) -> "ServeConfig":
+        return replace(self, **kw)
+
+    # The paged-pool and scheduler sub-configs are derived by field name so
+    # each knob has one source of truth here; a field added to either
+    # sub-config must be mirrored (same name) or it fails loudly below.
+    def _sub(self, cls, **overrides):
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if f.name in overrides:
+                kw[f.name] = overrides[f.name]
+            elif hasattr(self, f.name):
+                kw[f.name] = getattr(self, f.name)
+            elif f.default is dataclasses.MISSING:
+                raise TypeError(f"{cls.__name__}.{f.name} has no ServeConfig "
+                                "counterpart and no default")
+        return cls(**kw)
+
+    def paged_config(self, *, model_dtype: str = "bfloat16"):
+        from repro.serve.paged_kv import PagedKVConfig
+        return self._sub(PagedKVConfig, dtype=self.dtype or model_dtype)
+
+    def scheduler_config(self):
+        from repro.serve.scheduler import SchedulerConfig
+        return self._sub(SchedulerConfig)
+
+
+# ---------------------------------------------------------------------------
 # Input shapes assigned to this paper
 @dataclass(frozen=True)
 class ShapeConfig:

@@ -148,7 +148,8 @@ def make_param_shardings(mesh: Mesh, params_shape, plan: ShardingPlan,
     """Derive a NamedSharding pytree for a model parameter (shape) tree."""
     layout = layout_for_mesh(mesh)
     paths, leaves, treedef = tree_paths(params_shape)
-    mk = memory_kind or ("pinned_host" if plan.params_on_host else None)
+    from repro.core.compat import host_memory_kind
+    mk = memory_kind or (host_memory_kind() if plan.params_on_host else None)
     shardings = [
         param_strategy(p, tuple(l.shape), layout, plan).named_sharding(
             mesh, memory_kind=mk)

@@ -33,6 +33,70 @@ class KVPoolConfig:
     dtype: str = "bfloat16"
 
 
+class HostArchive:
+    """The supernode's pooled-DRAM tier, as a keyed pytree store.
+
+    One placement policy shared by every cold-KV consumer
+    (:class:`KVCachePool`'s block archive, HyperServe's preempted-request
+    page spill): arrays ``put`` here move to ``pinned_host`` memory when
+    the mesh exposes it, and come back to device on ``fetch``.  On hosts
+    whose backend has no host memory kind (the CPU test container) the
+    placement is a no-op but the accounting — what the serving runtime
+    budgets against — still works.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        from repro.core.compat import device_memory_kind, host_memory_kind
+        self._host = None
+        self._dev = None
+        if mesh is not None:
+            try:
+                self._host = NamedSharding(mesh, P(),
+                                           memory_kind=host_memory_kind())
+                # explicit device-tier destination: a bare device_put is the
+                # identity for an array already committed to pinned_host
+                self._dev = NamedSharding(mesh, P(),
+                                          memory_kind=device_memory_kind())
+            except (ValueError, TypeError):   # backend without memory kinds
+                self._host = None
+                self._dev = None
+        self._store: dict = {}
+
+    # -- placement ---------------------------------------------------------
+    def to_host(self, x):
+        if self._host is not None:
+            return jax.tree.map(lambda a: jax.device_put(a, self._host), x)
+        return x
+
+    def to_device(self, x, sharding=None):
+        dst = sharding if sharding is not None else self._dev
+        if dst is not None:
+            return jax.tree.map(lambda a: jax.device_put(a, dst), x)
+        return x
+
+    # -- keyed store (spilled pages, archived blocks) ----------------------
+    def put(self, key, value) -> None:
+        self._store[key] = self.to_host(value)
+
+    def fetch(self, key, *, sharding=None, pop: bool = True):
+        value = self._store.pop(key) if pop else self._store[key]
+        return self.to_device(value, sharding)
+
+    def __contains__(self, key) -> bool:
+        return key in self._store
+
+    def discard(self, key) -> None:
+        self._store.pop(key, None)
+
+    def keys(self):
+        return self._store.keys()
+
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for v in self._store.values()
+                   for a in jax.tree.leaves(v))
+
+
 @jax.jit
 def _partial_attn(q, k, v):
     """Normalised partial attention over one block + its log-sum-exp.
@@ -81,17 +145,10 @@ class KVCachePool:
         self.archive_k: list = []        # host-resident blocks
         self.archive_v: list = []
         self.length = 0
-        self._host = None
-        if mesh is not None and "pinned_host" in {
-                m for d in mesh.devices.flat for m in getattr(d, "memory_spaces", [])}:
-            pass
-        if mesh is not None:
-            self._host = NamedSharding(mesh, P(), memory_kind="pinned_host")
+        self._archive = HostArchive(mesh)
 
     def _to_host(self, x):
-        if self._host is not None:
-            return jax.device_put(x, self._host)
-        return x
+        return self._archive.to_host(x)
 
     def append(self, k_new, v_new):
         """Append one token (B, 1, KV, hd); spills a full hot window to host."""

@@ -79,6 +79,21 @@ def transfer(x, dst: ProcessGroup, *spec):
     return jax.device_put(x, dst.sharding(*spec))
 
 
+def serving_groups(n_prefill: int, n_decode: int,
+                   devices: Optional[Sequence] = None,
+                   ) -> Dict[str, ProcessGroup]:
+    """Prefill/decode disaggregation split for HyperServe (paper §3.3).
+
+    Prefill workers run compute-bound full-prompt forward passes; decode
+    workers run memory-bound token steps against the paged KV pool — the
+    paper's heterogeneous-role concurrency applied to serving.  Returns
+    ``{"prefill": ..., "decode": ...}`` process groups carved from one
+    device list.
+    """
+    return groups_from_mapping({"prefill": n_prefill, "decode": n_decode},
+                               devices=devices)
+
+
 @dataclasses.dataclass
 class Task:
     group: str

@@ -37,6 +37,8 @@ from jax import checkpoint_policies as _cp
 from jax.ad_checkpoint import checkpoint_name
 from jax.sharding import Mesh, NamedSharding
 
+from repro.core.compat import device_memory_kind, host_memory_kind
+
 RESIDUAL_NAME = "hyperoffload_resid"
 
 
@@ -78,12 +80,13 @@ def _fully_sharded(s: NamedSharding) -> bool:
 def host_shardings(shardings):
     """Host-place every leaf that XLA can host-place (see _fully_sharded)."""
     return jax.tree.map(
-        lambda s: NamedSharding(s.mesh, s.spec, memory_kind="pinned_host")
+        lambda s: NamedSharding(s.mesh, s.spec,
+                                memory_kind=host_memory_kind())
         if _fully_sharded(s) else s, shardings)
 
 
 def device_shardings(shardings):
-    return with_memory_kind(shardings, "device")
+    return with_memory_kind(shardings, device_memory_kind())
 
 
 def fetch_tree(tree, shardings):
@@ -94,8 +97,8 @@ def fetch_tree(tree, shardings):
     replication restriction as the host one.)
     """
     return jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(s.mesh, s.spec,
-                                                     memory_kind="device"))
+        lambda x, s: jax.device_put(x, NamedSharding(
+            s.mesh, s.spec, memory_kind=device_memory_kind()))
         if _fully_sharded(s) else x,
         tree, shardings)
 
@@ -103,8 +106,8 @@ def fetch_tree(tree, shardings):
 def offload_tree(tree, shardings):
     """Device->host offload (same selectivity as host_shardings)."""
     return jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(s.mesh, s.spec,
-                                                     memory_kind="pinned_host"))
+        lambda x, s: jax.device_put(x, NamedSharding(
+            s.mesh, s.spec, memory_kind=host_memory_kind()))
         if _fully_sharded(s) else x,
         tree, shardings)
 
@@ -119,7 +122,7 @@ def activation_offload_policy():
     return _cp.save_and_offload_only_these_names(
         names_which_can_be_saved=[],
         names_which_can_be_offloaded=[RESIDUAL_NAME],
-        offload_src="device", offload_dst="pinned_host")
+        offload_src=device_memory_kind(), offload_dst=host_memory_kind())
 
 
 def unstack_layers(stacked):
@@ -142,8 +145,8 @@ def streamed_apply(layer_fn: Callable, x, host_layer_params: list,
     """
     for lp in host_layer_params:
         lp_dev = jax.tree.map(
-            lambda a, s: jax.device_put(a, NamedSharding(s.mesh, s.spec,
-                                                         memory_kind="device")),
+            lambda a, s: jax.device_put(a, NamedSharding(
+                s.mesh, s.spec, memory_kind=device_memory_kind())),
             lp, layer_shardings)
         x = layer_fn(x, lp_dev, *extra)
     return x

@@ -1,7 +1,14 @@
-"""Serving launcher: batched generation with optional sliding window.
+"""Serving launcher: fixed-batch generation or the HyperServe runtime.
+
+Fixed batch (the PR-0 path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 16 --max-new 32
+
+Continuous batching over the paged KV pool, with staggered arrivals:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --continuous --requests 8 --max-new 16 [--disaggregate]
 """
 from __future__ import annotations
 
@@ -10,28 +17,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import get_config
+from repro.configs.base import ServeConfig, get_config
 from repro.models import model as M
 from repro.serve.engine import GenerateConfig, Generator
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--window", type=int, default=0,
-                    help="sliding-window decode cache (0 = full)")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = M.init_model(cfg, jax.random.PRNGKey(0))
+def run_fixed(cfg, params, args):
     gen = Generator(cfg, params,
                     max_len=args.prompt_len + args.max_new + 8,
                     window_override=args.window or None)
@@ -45,6 +38,83 @@ def main():
     print(f"generated {n_new} tokens in {dt:.2f}s "
           f"({n_new/dt:.1f} tok/s on this host)")
     print("first sequence:", out[0].tolist())
+
+
+def run_continuous(cfg, params, args):
+    from repro.serve.api import HyperServe
+
+    scfg = ServeConfig(block_size=args.block_size,
+                       num_blocks=args.num_blocks,
+                       max_blocks_per_req=max(
+                           4, -(-(args.prompt_len + args.max_new)
+                                // args.block_size) + 1),
+                       max_slots=args.slots,
+                       prefill_chunk=args.prefill_chunk)
+    groups = {}
+    if args.disaggregate:
+        from repro.core.mpmd import serving_groups
+        n = len(jax.devices())
+        if n < 2:
+            raise SystemExit("--disaggregate needs >= 2 devices "
+                             "(set XLA_FLAGS=--xla_force_host_platform_"
+                             "device_count=8 to try on CPU)")
+        gs = serving_groups(n // 2, n - n // 2)
+        groups = {"prefill_group": gs["prefill"], "decode_group": gs["decode"]}
+    serve = HyperServe(cfg, params, serve_cfg=scfg, **groups)
+
+    rng = np.random.default_rng(0)
+    rids = []
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
+        rids.append(serve.submit(prompt, int(rng.integers(
+            args.max_new // 2, args.max_new + 1)),
+            temperature=args.temperature))
+        # stagger arrivals: interleave a couple of engine steps per submit
+        for _ in range(2):
+            serve.step_once()
+    out = serve.join()
+    dt = time.perf_counter() - t0
+    st = serve.stats()
+    n_new = sum(len(out[r]) for r in rids)
+    print(f"served {len(rids)} requests, {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s on this host)")
+    print(f"peak-free blocks={st['free_blocks']} "
+          f"preemptions={st['preemptions']} prefix_hits={st['prefix_hits']}")
+    print("first request tokens:", out[rids[0]])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding-window decode cache (0 = full)")
+    # HyperServe runtime
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV pool")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode role split over device subgroups")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    if args.continuous:
+        run_continuous(cfg, params, args)
+    else:
+        run_fixed(cfg, params, args)
 
 
 if __name__ == "__main__":

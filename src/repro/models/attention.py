@@ -130,6 +130,65 @@ def attn_prefill(p, x, positions, cfg, *, window: Optional[int] = None):
     return out.reshape(B, S, -1) @ p["wo"], cache
 
 
+def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
+                      block_size: int):
+    """One-token decode against the paged KV pool (HyperServe).
+
+    x: (B, 1, D) — one token per batch slot; ``positions``: (B,) absolute
+    write position of each slot's token (continuous batching: every slot
+    is at a different position).  ``kv``: {"k","v"} pool leaves
+    (N_blocks, block, KV, hd) — the stacked-layer axis has already been
+    sliced off by the caller's scan.  ``block_tables``: (B, W) int32; row
+    padding entries point at the null block and are never unmasked.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(p, x, cfg, positions[:, None])
+    bidx = jnp.take_along_axis(
+        block_tables, (positions // block_size)[:, None], axis=1)[:, 0]
+    off = positions % block_size
+    k_pool = kv["k"].at[bidx, off].set(k[:, 0])
+    v_pool = kv["v"].at[bidx, off].set(v[:, 0])
+    W = block_tables.shape[1]
+    k_seq = k_pool[block_tables].reshape(B, W * block_size, KV, hd)
+    v_seq = v_pool[block_tables].reshape(B, W * block_size, KV, hd)
+    out = ops.decode_attention(q, k_seq, v_seq, (positions + 1).astype(jnp.int32))
+    y = out.reshape(B, 1, H * hd) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def attn_prefill_paged(p, x, start, limit, cfg, kv, block_table, *,
+                       block_size: int):
+    """One chunk of chunked prefill against the paged KV pool.
+
+    x: (1, C, D) — a chunk of one request's prompt, whose first token sits
+    at absolute position ``start`` (traced scalar).  Writes the chunk's
+    K/V into the request's pages, then attends the chunk queries over the
+    full gathered table (history + chunk) with ``q_offset=start`` causal
+    masking — exact chunked prefill.  ``limit`` (traced scalar) is the
+    prompt's true length: chunk rows at positions >= limit are padding —
+    their page writes are routed to the null block and their outputs are
+    the caller's to ignore.  ``block_table``: (W,) this request's table.
+    """
+    _, C, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = start + jnp.arange(C)[None, :]               # (1, C)
+    q, k, v = _qkv(p, x, cfg, positions)
+    pos = positions[0]
+    valid = pos < limit
+    bidx = block_table[jnp.where(valid, pos // block_size, 0)]
+    bidx = jnp.where(valid, bidx, 0)                         # null block
+    off = jnp.where(valid, pos % block_size, 0)
+    k_pool = kv["k"].at[bidx, off].set(k[0])
+    v_pool = kv["v"].at[bidx, off].set(v[0])
+    W = block_table.shape[0]
+    k_seq = k_pool[block_table].reshape(1, W * block_size, KV, hd)
+    v_seq = v_pool[block_table].reshape(1, W * block_size, KV, hd)
+    out = ops.flash_attention(q, k_seq, v_seq, causal=True, q_offset=start)
+    y = out.reshape(1, C, H * hd) @ p["wo"]
+    return y, {"k": k_pool, "v": v_pool}
+
+
 def attn_decode(p, x, pos, cfg, cache, *, window: Optional[int] = None):
     """One-token decode.  x: (B, 1, D); pos: scalar absolute position.
 

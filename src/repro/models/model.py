@@ -285,6 +285,100 @@ def init_caches(cfg, batch, cache_len, *, dtype=None, window_override=None):
     return caches
 
 
+def _paged_ffn(p, x, cfg, ffn, moe_dispatch):
+    if ffn == DENSE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(h, p["ffn"]["w_gate"], p["ffn"]["w_up"],
+                       p["ffn"]["w_down"])
+    elif ffn == MOE_FFN:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_forward(p["ffn"], h, cfg, dispatch=moe_dispatch)
+        x = x + y
+    return x
+
+
+def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
+                      *, block_size, moe_dispatch="gshard"):
+    """Continuous-batching decode: one token per slot at per-slot positions.
+
+    tokens: (B, 1) int32; positions: (B,) int32 absolute write positions
+    (slots advance independently — this is what ``decode_step``'s shared
+    scalar ``pos`` cannot express); kv_pools: :class:`PagedKVPool` pytree
+    with leaves (L, N_blocks, block, KV, hd); block_tables: (B, W) int32.
+    Returns (logits (B, 1, V_pad), new kv_pools).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, ("pod", "data"), None, None)
+
+    new_pools = {}
+    for si, seg in enumerate(segments(cfg)):
+        def body(h, xs, _seg=seg):
+            layer_params, layer_kv = xs
+            new_kv = []
+            for sub_p, kd, kv in zip(layer_params, _seg.kinds, layer_kv):
+                y, kv2 = attention.attn_decode_paged(
+                    sub_p["attn"], rms_norm(h, sub_p["norm1"], cfg.norm_eps),
+                    positions, cfg, kv, block_tables, block_size=block_size)
+                h = h + y
+                h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
+                new_kv.append(kv2)
+            return h, tuple(new_kv)
+
+        x, seg_kv = jax.lax.scan(body, x, (params[f"seg{si}"],
+                                           kv_pools[f"seg{si}"]))
+        new_pools[f"seg{si}"] = seg_kv
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.T
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, new_pools
+
+
+def prefill_chunk_paged(params, tokens, start, limit, cfg, kv_pools,
+                        block_table, *, block_size, moe_dispatch="gshard",
+                        with_logits=True):
+    """One chunked-prefill step for a single request (HyperServe).
+
+    tokens: (1, C) — the chunk, first token at absolute position ``start``
+    (traced scalar, so one compilation serves every chunk); ``limit`` is
+    the prompt's true length (padding rows never write real pages);
+    block_table: (W,) the request's table.  Writes the chunk's K/V into
+    the pool pages and returns (logits (1, C, V_pad), new kv_pools).
+    Only the prompt's final chunk needs logits (they seed the first
+    sampled token); ``with_logits=False`` skips the unembedding matmul —
+    the dominant per-chunk FLOP for real vocabularies — and returns the
+    final hidden states instead.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    new_pools = {}
+    for si, seg in enumerate(segments(cfg)):
+        def body(h, xs, _seg=seg):
+            layer_params, layer_kv = xs
+            new_kv = []
+            for sub_p, kd, kv in zip(layer_params, _seg.kinds, layer_kv):
+                y, kv2 = attention.attn_prefill_paged(
+                    sub_p["attn"], rms_norm(h, sub_p["norm1"], cfg.norm_eps),
+                    start, limit, cfg, kv, block_table,
+                    block_size=block_size)
+                h = h + y
+                h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
+                new_kv.append(kv2)
+            return h, tuple(new_kv)
+
+        x, seg_kv = jax.lax.scan(body, x, (params[f"seg{si}"],
+                                           kv_pools[f"seg{si}"]))
+        new_pools[f"seg{si}"] = seg_kv
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not with_logits:
+        return x, new_pools
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.T
+    return logits, new_pools
+
+
 def decode_step(params, token, pos, cfg, caches, *, window_override=None,
                 moe_dispatch="gshard", unroll=False):
     """token: (B, 1) int32; pos: scalar int32.  Returns (logits (B,1,V), caches)."""

@@ -1,0 +1,91 @@
+"""HyperServe front door: submit / stream / cancel / stats.
+
+A thin request/response surface over :class:`~repro.serve.runtime.ServeEngine`
+for embedding the serving stack in-process (examples, benchmarks, tests —
+a network listener would sit one level above this and own nothing more
+than serialisation):
+
+    serve = HyperServe(cfg, params)
+    rid = serve.submit([1, 2, 3], max_new_tokens=16)
+    for tok in serve.stream(rid):        # drives the engine lazily
+        ...
+    serve.stats()
+
+``submit`` applies admission control (a bounded queue; oversized or
+unservable prompts are rejected with :class:`RequestRejected`).  The
+engine advances only inside :meth:`step_once`, :meth:`stream`, and
+:meth:`join` — there is no background thread, so callers control exactly
+when device work happens (single-controller, like everything else here).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.serve.runtime import ServeEngine
+from repro.serve.scheduler import RequestState
+
+
+class RequestRejected(RuntimeError):
+    """Admission control refused the request (queue full / can't ever fit)."""
+
+
+class HyperServe:
+    def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
+                 prefill_group=None, decode_group=None, seed: int = 0,
+                 moe_dispatch: str = "gshard"):
+        self.engine = ServeEngine(cfg, params, serve_cfg=serve_cfg, mesh=mesh,
+                                  plan=plan, prefill_group=prefill_group,
+                                  decode_group=decode_group, seed=seed,
+                                  moe_dispatch=moe_dispatch)
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               temperature: float = 0.0, eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> int:
+        req = self.engine.scheduler.submit(
+            list(prompt), max_new_tokens, temperature=temperature,
+            eos_id=eos_id, arrival=arrival)
+        if req.state is RequestState.REJECTED:
+            raise RequestRejected(
+                f"request rejected: prompt_len={len(prompt)} "
+                f"max_new={max_new_tokens} (queue or pool limits)")
+        return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        return self.engine.scheduler.cancel(rid)
+
+    # -- progress ----------------------------------------------------------
+    def step_once(self) -> List[tuple]:
+        """Advance the engine one iteration; returns [(rid, token)]."""
+        return self.engine.step()
+
+    def stream(self, rid: int, max_steps: int = 100_000) -> Iterator[int]:
+        """Yield ``rid``'s tokens as they are generated, driving the engine."""
+        req = self.engine.scheduler.requests[rid]
+        emitted = 0
+        steps = 0
+        while True:
+            while emitted < len(req.generated):
+                yield req.generated[emitted]
+                emitted += 1
+            if req.done:
+                return
+            self.engine.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"stream({rid}) stalled after {steps} steps")
+
+    def join(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
+        """Drain every queued/running request; returns {rid: tokens}."""
+        return self.engine.run_until_complete(max_steps=max_steps)
+
+    def result(self, rid: int) -> List[int]:
+        req = self.engine.scheduler.requests[rid]
+        return list(req.generated)
+
+    def state(self, rid: int) -> str:
+        return self.engine.scheduler.requests[rid].state.value
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return self.engine.stats()

@@ -109,6 +109,110 @@ def _n(mesh, axes):
     return n
 
 
+# ---------------------------------------------------------------------------
+# HyperServe: jit'd units over the paged KV pool (block tables, not dense
+# per-request caches).  Shapes are static in (num_slots, table width,
+# chunk); positions/starts are traced, so one compilation serves the whole
+# continuous-batching run.
+# ---------------------------------------------------------------------------
+def make_pool_shardings(mesh: Optional[Mesh], pool_tree, plan):
+    """NamedShardings for PagedKVPool leaves (L, N_blocks, block, KV, hd).
+
+    Blocks are shared by every request, so the pool replicates over the
+    data axes; the KV-head dim shards over the tensor axes when divisible
+    (``hypershard.cache_strategy`` semantics, pool edition).
+    """
+    if mesh is None:
+        return None
+    from repro.core.layout import layout_for_mesh
+    layout = layout_for_mesh(mesh)
+    tp = tuple(a for a in (plan.tp or ()) if a in layout.alias_name)
+
+    def one(leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        tp_n = 1
+        for a in tp:
+            tp_n *= layout.axis_size(a)
+        if tp and shape[3] % tp_n == 0:
+            entries[3] = tp if len(tp) > 1 else tp[0]
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, pool_tree)
+
+
+def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
+                          block_size: int, pool_tree=None,
+                          donate: bool = True,
+                          moe_dispatch: str = "gshard"):
+    """Continuous-batching decode step: one token for every seated slot.
+
+    Returns ``step(params, tokens (B,1), positions (B,), pools, tables
+    (B,W)) -> (logits, new pools)`` with the pool donated (updated in
+    place on device).  The seat count B and table width W are fixed by
+    the arrays the caller passes (one compilation per distinct shape).
+    """
+
+    def step(params, tokens, positions, pools, tables):
+        ctx = use_mesh(mesh) if mesh is not None else _null()
+        with ctx:
+            return M.decode_step_paged(params, tokens, positions, cfg, pools,
+                                       tables, block_size=block_size,
+                                       moe_dispatch=moe_dispatch)
+
+    donate_kw = {"donate_argnums": (3,)} if donate else {}
+    if mesh is None:
+        return jax.jit(step, **donate_kw), {}
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    param_sh = hypershard.make_param_shardings(mesh, pshapes, plan)
+    pool_sh = make_pool_shardings(mesh, pool_tree, plan)
+    rep = NamedSharding(mesh, P())
+    tok_sh = NamedSharding(mesh, P(None, None))
+    tab_sh = NamedSharding(mesh, P(None, None))
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    jitted = jax.jit(step,
+                     in_shardings=(param_sh, tok_sh, rep, pool_sh, tab_sh),
+                     out_shardings=(logits_sh, pool_sh), **donate_kw)
+    return jitted, {"params": param_sh, "pools": pool_sh}
+
+
+def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
+                            block_size: int, pool_tree=None,
+                            donate: bool = True, with_logits: bool = True,
+                            moe_dispatch: str = "gshard"):
+    """Chunked-prefill step for one request: ``(params, tokens (1,C),
+    start, limit, pools, table (W,)) -> (logits (1,C,V), new pools)``.
+
+    Build one ``with_logits=False`` variant for non-final chunks — their
+    logits are discarded, so they can skip the unembedding matmul.
+    """
+
+    def step(params, tokens, start, limit, pools, table):
+        ctx = use_mesh(mesh) if mesh is not None else _null()
+        with ctx:
+            return M.prefill_chunk_paged(params, tokens, start, limit, cfg,
+                                         pools, table, block_size=block_size,
+                                         moe_dispatch=moe_dispatch,
+                                         with_logits=with_logits)
+
+    donate_kw = {"donate_argnums": (4,)} if donate else {}
+    if mesh is None:
+        return jax.jit(step, **donate_kw), {}
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    param_sh = hypershard.make_param_shardings(mesh, pshapes, plan)
+    pool_sh = make_pool_shardings(mesh, pool_tree, plan)
+    rep = NamedSharding(mesh, P())
+    tok_sh = NamedSharding(mesh, P(None, None))
+    tab_sh = NamedSharding(mesh, P(None))
+    out0_sh = (NamedSharding(mesh, P(None, None, "model")) if with_logits
+               else NamedSharding(mesh, P(None, None, None)))
+    jitted = jax.jit(step,
+                     in_shardings=(param_sh, tok_sh, rep, rep, pool_sh,
+                                   tab_sh),
+                     out_shardings=(out0_sh, pool_sh), **donate_kw)
+    return jitted, {"params": param_sh, "pools": pool_sh}
+
+
 class _null:
     def __enter__(self):
         return None

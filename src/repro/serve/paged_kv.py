@@ -1,0 +1,251 @@
+"""Paged KV cache: fixed-size HBM blocks + block tables (HyperServe §3.2).
+
+HBM is treated as a managed cache over the supernode's pooled DRAM
+(HyperOffload, arXiv 2602.00748): the KV state of every in-flight request
+lives in fixed-size **blocks** carved out of one pooled allocation, mapped
+through per-request **block tables**.  Three pieces:
+
+  - :class:`BlockManager` — pure host-side bookkeeping: a free list,
+    per-block reference counts (copy-on-write prefix sharing), admission
+    queries, and spill/restore of a request's pages into the shared
+    :class:`~repro.core.kvcache.HostArchive` (the cold tier).
+  - :class:`PagedKVPool` — the device arrays themselves, one ``{k, v}``
+    leaf pair per attention segment shaped ``(L, N_blocks, block, KV, hd)``,
+    plus the host-driven page extract/insert used by spill and restore.
+  - :func:`blocks_for` — tokens -> blocks arithmetic.
+
+Block id 0 is the **null block**: never allocated, the write target for
+inactive batch slots and the padding entry of every block table.  Reads
+through it are always masked by the decode length, so its contents are
+don't-care.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, LOCAL_ATTN
+from repro.core.kvcache import HostArchive
+from repro.models import model as M
+
+
+class NoFreeBlocks(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+def blocks_for(num_tokens: int, block_size: int) -> int:
+    return -(-num_tokens // block_size)          # ceil div
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    block_size: int = 16          # tokens per HBM block
+    num_blocks: int = 128         # pool size, including the null block
+    max_blocks_per_req: int = 16  # block-table width (static for jit)
+    dtype: str = "bfloat16"
+
+    @property
+    def max_context(self) -> int:
+        return self.block_size * self.max_blocks_per_req
+
+
+class BlockManager:
+    """Free-list allocator with refcounts, CoW forking and host spill."""
+
+    NULL = 0
+
+    def __init__(self, cfg: PagedKVConfig, archive: Optional[HostArchive] = None):
+        self.cfg = cfg
+        self.archive = archive if archive is not None else HostArchive()
+        self._free: List[int] = list(range(cfg.num_blocks - 1, 0, -1))
+        self._ref = np.zeros((cfg.num_blocks,), np.int32)
+        self._ref[self.NULL] = 1                 # never allocatable
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_total(self) -> int:
+        return self.cfg.num_blocks - 1           # null block excluded
+
+    def occupancy(self) -> float:
+        return 1.0 - self.num_free / max(self.num_total, 1)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.num_free
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    # -- alloc / free ------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        if n > self.num_free:
+            raise NoFreeBlocks(f"need {n} blocks, have {self.num_free}")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            assert self._ref[b] == 0, (b, self._ref[b])
+            self._ref[b] = 1
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b == self.NULL:
+                continue
+            assert self._ref[b] > 0, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+
+    # -- copy-on-write -----------------------------------------------------
+    def fork(self, table: Sequence[int]) -> List[int]:
+        """Share ``table``'s blocks with a new owner (prefix sharing)."""
+        for b in table:
+            if b != self.NULL:
+                self._ref[b] += 1
+        return list(table)
+
+    def is_shared(self, bid: int) -> bool:
+        return bid != self.NULL and self._ref[bid] > 1
+
+    def ensure_writable(self, table: List[int], idx: int,
+                        copy_page) -> Tuple[List[int], int]:
+        """Make ``table[idx]`` exclusively owned before a write.
+
+        If the block is shared, a fresh block is allocated, ``copy_page(src,
+        dst)`` is invoked to duplicate its contents, and the table entry is
+        repointed (the classic CoW fault).  Returns the (possibly updated)
+        table and the writable block id.
+        """
+        bid = table[idx]
+        if not self.is_shared(bid):
+            return table, bid
+        [new] = self.alloc(1)
+        copy_page(bid, new)
+        self._ref[bid] -= 1                      # old ref released, >=1 remain
+        table = list(table)
+        table[idx] = new
+        return table, new
+
+    # -- spill / restore (cold tier) ---------------------------------------
+    def spill(self, key, table: Sequence[int], extract_pages) -> None:
+        """Move a request's page contents to the host archive, free blocks.
+
+        ``extract_pages(bids) -> pytree`` pulls the page contents out of the
+        device pool *before* the blocks return to the free list (they may be
+        reallocated in the same scheduler step).
+        """
+        real = [b for b in table if b != self.NULL]
+        self.archive.put(key, extract_pages(real))
+        self.free(real)
+
+    def restore(self, key, insert_pages) -> List[int]:
+        """Re-seat spilled pages into freshly allocated blocks.
+
+        ``insert_pages(pages, bids)`` scatters the archived contents back
+        into the device pool.  Raises :class:`NoFreeBlocks` (leaving the
+        archive entry intact) when the pool can't fit them yet.
+        """
+        pages = self.archive.fetch(key, pop=False)
+        n = jax.tree.leaves(pages)[0].shape[1]
+        bids = self.alloc(n)                     # may raise NoFreeBlocks
+        self.archive.discard(key)
+        insert_pages(pages, bids)
+        return bids
+
+    def spilled(self, key) -> bool:
+        return key in self.archive
+
+
+def _attn_segments(cfg) -> List[Tuple[str, int, Tuple[str, ...]]]:
+    """(seg name, repeat, mixer kinds) — validates the paged-serve support."""
+    out = []
+    for si, seg in enumerate(M.segments(cfg)):
+        mixers = tuple(kd[0] for kd in seg.kinds)
+        for mx in mixers:
+            if mx == LOCAL_ATTN:
+                raise ValueError(
+                    f"paged KV serving does not yet apply sliding windows; "
+                    f"{cfg.name} segment {si} has {mx!r} (serving it "
+                    f"unwindowed would silently diverge from the dense "
+                    f"decode path — see ROADMAP open items)")
+            if mx != ATTN:
+                raise ValueError(
+                    f"paged KV serving supports attention mixers only; "
+                    f"{cfg.name} segment {si} has {mx!r} (SSM/RG-LRU/MLA "
+                    f"decode state is O(1) per request and does not page)")
+        out.append((f"seg{si}", seg.repeat, mixers))
+    return out
+
+
+class PagedKVPool:
+    """The pooled HBM KV arrays for every attention layer of one model.
+
+    The pytree mirrors the model's decode-cache structure — per segment a
+    tuple of per-sublayer ``{"k", "v"}`` dicts — but every leaf is shaped
+    ``(L, N_blocks, block, KV, hd)``: the per-request sequence dim is
+    replaced by the shared (block, offset) pool that block tables index.
+    The leading stacked-layer axis is what the model's ``lax.scan`` slices.
+    """
+
+    def __init__(self, cfg, pcfg: PagedKVConfig, *,
+                 dtype=None, shardings=None):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        kv_heads, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = dtype or jnp.dtype(pcfg.dtype)
+        self.kv: Dict[str, tuple] = {}
+        for name, repeat, mixers in _attn_segments(cfg):
+            shape = (repeat, pcfg.num_blocks, pcfg.block_size, kv_heads, hd)
+            self.kv[name] = tuple(
+                {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+                for _ in mixers)
+        if shardings is not None:
+            self.kv = jax.tree.map(jax.device_put, self.kv, shardings)
+
+    def hbm_bytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(self.kv))
+
+    # -- host-driven page movement (spill / restore / CoW copy) ------------
+    def extract_pages(self, bids: Sequence[int]):
+        """Gather blocks ``bids`` out of the pool: leaf (L, n, bs, KV, hd)."""
+        idx = jnp.asarray(list(bids), jnp.int32)
+        return jax.tree.map(lambda a: a[:, idx], self.kv)
+
+    def insert_pages(self, pages, bids: Sequence[int]) -> None:
+        idx = jnp.asarray(list(bids), jnp.int32)
+        self.kv = jax.tree.map(
+            lambda a, p: a.at[:, idx].set(p.astype(a.dtype)), self.kv, pages)
+
+    def copy_page(self, src: int, dst: int) -> None:
+        self.kv = jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), self.kv)
+
+    def seat_prefill_caches(self, pcaches, bids: Sequence[int],
+                            seq_len: int, row: int = 0) -> None:
+        """Scatter a dense prefill cache (one request) into pages.
+
+        ``pcaches`` is the ``M.forward(..., mode="prefill")`` cache pytree
+        with leaves (L, B, S, KV, hd); ``row`` selects the request within
+        it.  Used by the disaggregated path, where a prefill worker
+        produces the dense cache and hands it to the decode worker's pool.
+        """
+        bs = self.pcfg.block_size
+        n = blocks_for(seq_len, bs)
+        assert n <= len(bids), (seq_len, len(bids))
+        idx = jnp.asarray(list(bids)[:n], jnp.int32)
+        pad = n * bs - seq_len
+
+        def seat(pool, pc):
+            src = pc[:, row, :seq_len]                         # (L, S, KV, hd)
+            if pad:
+                src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            src = src.reshape(src.shape[0], n, bs, *src.shape[2:])
+            return pool.at[:, idx].set(src.astype(pool.dtype))
+
+        self.kv = jax.tree.map(seat, self.kv, pcaches)

@@ -1,0 +1,306 @@
+"""HyperServe engine loop: requests in, tokens out.
+
+``ServeEngine`` composes the paged pool (:mod:`repro.serve.paged_kv`),
+the continuous-batching scheduler (:mod:`repro.serve.scheduler`) and the
+jit'd paged steps (:mod:`repro.serve.engine`) into one iteration:
+
+    plan = scheduler.schedule()          # admit / resume / preempt
+    run plan.prefill chunks              # <= budget, so decode never starves
+    run one decode step for all slots    # every runner advances one token
+
+The decode batch is a fixed set of ``max_slots`` seats — requests are
+seated and evicted, the jit'd step never recompiles.  Empty seats decode
+a dummy token against the null block; their logits are ignored.
+
+Prefill/decode disaggregation (HyperMPMD §3.3): given ``prefill_group`` /
+``decode_group`` process groups (:func:`repro.core.mpmd.serving_groups`),
+prompts are prefilled densely on the prefill workers' submesh, and the
+resulting KV pages are handed to the decode workers' pool via a
+resharding transfer — the decode mesh never spends a step on prefill
+compute.  Without groups, chunked prefill interleaves on the one mesh.
+
+A finished prompt's full blocks can be retained in a copy-on-write
+**prefix cache**: an identical prompt prefix forks the cached blocks
+(refcount bump, zero copies, zero recompute) and prefills only the tail.
+Cache blocks are evicted LRU under pool pressure, before any preemption.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hypershard, mpmd
+from repro.core.kvcache import HostArchive
+from repro.serve import engine as E
+from repro.serve.paged_kv import BlockManager, PagedKVPool
+from repro.serve.scheduler import ContinuousScheduler, Request, RequestState
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
+                 prefill_group: Optional[mpmd.ProcessGroup] = None,
+                 decode_group: Optional[mpmd.ProcessGroup] = None,
+                 moe_dispatch: str = "gshard", seed: int = 0):
+        from repro.configs.base import ServeConfig
+        self.cfg = cfg
+        self.scfg = serve_cfg or ServeConfig()
+        scfg = self.scfg
+        if (prefill_group is None) != (decode_group is None):
+            raise ValueError("disaggregation needs BOTH prefill and decode "
+                             "groups (or neither)")
+        self.prefill_group = prefill_group
+        self.decode_group = decode_group
+        self.mesh = decode_group.mesh if decode_group is not None else mesh
+        self.plan = plan or hypershard.ShardingPlan(fsdp=None)
+        self.moe_dispatch = moe_dispatch
+
+        self.pcfg = scfg.paged_config(model_dtype=cfg.dtype)
+        self.pool = PagedKVPool(cfg, self.pcfg)
+        pool_sh = E.make_pool_shardings(self.mesh, self.pool.kv, self.plan)
+        if pool_sh is not None:
+            self.pool.kv = jax.tree.map(jax.device_put, self.pool.kv, pool_sh)
+        self.blocks = BlockManager(self.pcfg, HostArchive(self.mesh))
+        self.scheduler = ContinuousScheduler(
+            scfg.scheduler_config(), self.blocks, scfg.block_size,
+            scfg.max_blocks_per_req,
+            spill=self._spill, restore=self._restore, reclaim=self._reclaim,
+            prefix=self._prefix_lookup, retain=self._retain)
+
+        # jit'd units ------------------------------------------------------
+        self._decode_step, _ = E.make_paged_serve_step(
+            cfg, self.mesh, self.plan, block_size=scfg.block_size,
+            pool_tree=self.pool.kv, donate=True, moe_dispatch=moe_dispatch)
+        if prefill_group is None:
+            self._prefill_step, _ = E.make_paged_prefill_step(
+                cfg, self.mesh, self.plan, block_size=scfg.block_size,
+                pool_tree=self.pool.kv, donate=True,
+                moe_dispatch=moe_dispatch)
+            # non-final chunks discard their logits; this variant skips the
+            # unembedding matmul (compiles lazily on first multi-chunk prompt)
+            self._prefill_step_mid, _ = E.make_paged_prefill_step(
+                cfg, self.mesh, self.plan, block_size=scfg.block_size,
+                pool_tree=self.pool.kv, donate=True, with_logits=False,
+                moe_dispatch=moe_dispatch)
+            self.params = params
+            if self.mesh is not None:
+                pshapes = jax.eval_shape(lambda p: p, params)
+                psh = hypershard.make_param_shardings(self.mesh, pshapes,
+                                                      self.plan)
+                self.params = jax.tree.map(jax.device_put, params, psh)
+            self._params_prefill = None
+        else:
+            # disaggregated: dense prefill on the prefill submesh, decode on
+            # the decode submesh; params live on both (the paper's
+            # heterogeneous-role deployment, not a memory optimisation)
+            pshapes = jax.eval_shape(lambda p: p, params)
+            psh_d = hypershard.make_param_shardings(self.mesh, pshapes,
+                                                    self.plan)
+            self.params = jax.tree.map(jax.device_put, params, psh_d)
+            psh_p = hypershard.make_param_shardings(prefill_group.mesh,
+                                                    pshapes, self.plan)
+            self._params_prefill = jax.tree.map(jax.device_put, params, psh_p)
+            self._dense_prefill = {}          # padded len -> jitted step
+        self.mpmd_sched = mpmd.MPMDScheduler(
+            {g.name: g for g in (prefill_group, decode_group) if g is not None})
+
+        # prefix cache: token-tuple -> block ids (refs held by the cache)
+        self._prefix_cache: "OrderedDict[Tuple[int, ...], List[int]]" = \
+            OrderedDict()
+        self._key = jax.random.PRNGKey(seed)
+        self._sample_step = 0
+        self.t_start = time.perf_counter()
+        self.tokens_generated = 0
+
+    # ------------------------------------------------------------------
+    # tier-movement callbacks (scheduler-driven)
+    # ------------------------------------------------------------------
+    def _spill(self, req: Request) -> None:
+        self.blocks.spill(req.archive_key, req.table, self.pool.extract_pages)
+
+    def _restore(self, req: Request) -> List[int]:
+        return self.blocks.restore(req.archive_key, self.pool.insert_pages)
+
+    def _reclaim(self, n: int) -> int:
+        """Evict LRU prefix-cache entries until >= n blocks are freed."""
+        freed = 0
+        while self._prefix_cache and freed < n:
+            _, bids = self._prefix_cache.popitem(last=False)
+            before = self.blocks.num_free
+            self.blocks.free(bids)
+            freed += self.blocks.num_free - before
+        return freed
+
+    def _prefix_lookup(self, req: Request) -> List[int]:
+        # disagg mode seats the whole dense prefill cache into the table,
+        # which would write through CoW-shared blocks — no sharing there
+        if not self.scfg.enable_prefix_cache or self.prefill_group is not None:
+            return []
+        bs = self.pcfg.block_size
+        # at least one prompt token must remain to prefill (its logits seed
+        # the first generated token), hence the -1
+        for nb in range((req.prompt_len - 1) // bs, 0, -1):
+            key = tuple(req.prompt[:nb * bs])
+            if key in self._prefix_cache:
+                self._prefix_cache.move_to_end(key)
+                return self.blocks.fork(self._prefix_cache[key])
+        return []
+
+    def _retain(self, req: Request) -> None:
+        if not self.scfg.enable_prefix_cache:
+            return
+        bs = self.pcfg.block_size
+        # retain every full-block prefix: a future prompt can only fork a
+        # prefix strictly shorter than itself, so the longest entry alone
+        # would never match an identical prompt
+        for nb in range(1, req.prompt_len // bs + 1):
+            key = tuple(req.prompt[:nb * bs])
+            if key in self._prefix_cache:
+                self._prefix_cache.move_to_end(key)
+                continue
+            self._prefix_cache[key] = self.blocks.fork(req.table[:nb])
+        while (sum(len(v) for v in self._prefix_cache.values())
+               > self.scfg.prefix_cache_blocks):
+            _, bids = self._prefix_cache.popitem(last=False)
+            self.blocks.free(bids)
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _sample(self, logits_row, temperature: float) -> int:
+        lg = logits_row[:self.cfg.vocab_size].astype(jnp.float32)
+        if temperature <= 0:
+            return int(jnp.argmax(lg))
+        self._sample_step += 1
+        key = jax.random.fold_in(self._key, self._sample_step)
+        return int(jax.random.categorical(key, lg / temperature))
+
+    # ------------------------------------------------------------------
+    # prefill execution
+    # ------------------------------------------------------------------
+    def _padded_table(self, req: Request) -> np.ndarray:
+        t = np.zeros((self.pcfg.max_blocks_per_req,), np.int32)
+        t[:len(req.table)] = req.table
+        return t
+
+    def _run_prefill_chunk(self, req: Request) -> None:
+        if self.prefill_group is not None:
+            self._run_disagg_prefill(req)
+            return
+        bs_chunk = self.scfg.prefill_chunk
+        c0 = req.prefill_done
+        n = min(bs_chunk, req.prompt_len - c0)
+        is_final = c0 + n == req.prompt_len
+        toks = np.zeros((1, bs_chunk), np.int32)
+        toks[0, :n] = req.prompt[c0:c0 + n]
+        step_fn = self._prefill_step if is_final else self._prefill_step_mid
+        logits, self.pool.kv = step_fn(
+            self.params, jnp.asarray(toks), jnp.int32(c0),
+            jnp.int32(req.prompt_len), self.pool.kv,
+            jnp.asarray(self._padded_table(req)))
+        self.scheduler.on_prefill_chunk(req, n)
+        if is_final:
+            first = self._sample(logits[0, n - 1], req.temperature)
+            self.scheduler.on_prompt_complete(req, first)
+            self.tokens_generated += 1
+
+    def _dense_prefill_fn(self, padded_len: int):
+        if padded_len not in self._dense_prefill:
+            fn, _ = E.make_prefill_step(self.cfg, self.prefill_group.mesh,
+                                        self.plan, batch=1,
+                                        seq_len=padded_len,
+                                        moe_dispatch=self.moe_dispatch)
+            self._dense_prefill[padded_len] = fn
+        return self._dense_prefill[padded_len]
+
+    def _run_disagg_prefill(self, req: Request) -> None:
+        """Whole-prompt prefill on the prefill workers, pages to decode."""
+        S = req.prompt_len
+        pad = -S % self.scfg.prefill_chunk
+        toks = np.zeros((1, S + pad), np.int32)
+        toks[0, :S] = req.prompt
+        task = self.mpmd_sched.submit(
+            self.prefill_group.name, self._dense_prefill_fn(S + pad),
+            self._params_prefill, jnp.asarray(toks))
+        logits, pcaches = task.out
+        # hand the KV pages to the decode workers (resharding device_put)
+        dst = self.decode_group.sharding()
+        pcaches = jax.tree.map(lambda a: jax.device_put(a, dst), pcaches)
+        self.pool.seat_prefill_caches(pcaches, req.table, S)
+        self.scheduler.on_prefill_chunk(req, S - req.prefill_done)
+        first = self._sample(logits[0, S - 1], req.temperature)
+        self.scheduler.on_prompt_complete(req, first)
+        self.tokens_generated += 1
+
+    # ------------------------------------------------------------------
+    # the engine iteration
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler+compute iteration.  Returns [(rid, new token)]."""
+        plan = self.scheduler.schedule()
+        events: List[Tuple[int, int]] = []
+        for req in plan.prefill:
+            self._run_prefill_chunk(req)
+            if req.generated:
+                events.append((req.rid, req.generated[-1]))
+
+        runners = [r for r in plan.decode
+                   if r.state is RequestState.RUNNING]
+        if runners:
+            B = self.scfg.max_slots
+            W = self.pcfg.max_blocks_per_req
+            tokens = np.zeros((B, 1), np.int32)
+            positions = np.zeros((B,), np.int32)
+            tables = np.zeros((B, W), np.int32)
+            for r in runners:
+                tokens[r.slot, 0] = r.generated[-1]
+                positions[r.slot] = r.total_len - 1
+                tables[r.slot, :len(r.table)] = r.table
+            logits, self.pool.kv = self._decode_step(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                self.pool.kv, jnp.asarray(tables))
+            if all(r.temperature <= 0 for r in runners):
+                # batched greedy: one device op + one transfer for the whole
+                # batch instead of a sync per seated slot
+                nxt = np.asarray(jnp.argmax(
+                    logits[:, -1, :self.cfg.vocab_size].astype(jnp.float32),
+                    axis=-1))
+                picks = {r.slot: int(nxt[r.slot]) for r in runners}
+            else:
+                picks = {r.slot: self._sample(logits[r.slot, -1],
+                                              r.temperature)
+                         for r in runners}
+            for r in runners:
+                tok = picks[r.slot]
+                self.scheduler.on_decode_token(r, tok)
+                self.tokens_generated += 1
+                events.append((r.rid, tok))
+        return events
+
+    def run_until_complete(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
+        steps = 0
+        while self.scheduler.has_work():
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("serving loop did not drain "
+                                   f"({max_steps} steps)")
+        return {rid: r.generated for rid, r in self.scheduler.requests.items()}
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        dt = time.perf_counter() - self.t_start
+        s = self.scheduler.stats()
+        s.update({
+            "tokens_generated": self.tokens_generated,
+            "tokens_per_sec": self.tokens_generated / dt if dt > 0 else 0.0,
+            "pool_hbm_bytes": self.pool.hbm_bytes(),
+            "archive_host_bytes": self.blocks.archive.nbytes(),
+            "prefix_cache_blocks": sum(len(v)
+                                       for v in self._prefix_cache.values()),
+        })
+        return s

@@ -1,0 +1,328 @@
+"""Continuous-batching scheduler (HyperServe control plane).
+
+Pure host-side decision logic in the spirit of HyperMPMD's heterogeneous
+role orchestration (paper §3.3): given the block pool's state, decide
+each engine iteration
+
+  1. **admission** — strict FCFS from the wait queue while a batch slot is
+     free and the pool can hold the request's prompt plus a watermark
+     margin (requests whose prompt + budget can never fit the block-table
+     width are rejected outright, and the queue itself is bounded);
+  2. **chunked prefill** — at most ``prefill_chunks_per_step`` prompt
+     chunks are scheduled per iteration, so long prompts never starve the
+     decode batch (chunked-prefill interleaving);
+  3. **decode** — every RUNNING request advances one token.  Before the
+     step each runner is guaranteed a page for its next position; when the
+     pool is exhausted the *youngest* runner is preempted — its pages
+     spill to the host archive (HyperOffload's cold tier) and it re-enters
+     the queue at the front, resuming later via page restore, never by
+     recomputation.
+
+The scheduler owns no device arrays: page movement is delegated to
+callbacks the runtime injects (``spill``/``restore`` move pages across
+memory tiers, ``reclaim`` evicts prefix-cache blocks under pressure,
+``prefix`` looks up copy-on-write shared prompt blocks, ``retain`` lets
+finished prompts enter the prefix cache before their refs drop).  This
+keeps the module unit-testable without touching JAX.
+
+Archive-key convention shared with the runtime: request ``rid`` spills
+under ``("req", rid)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.serve.paged_kv import BlockManager, NoFreeBlocks, blocks_for
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    state: RequestState = RequestState.QUEUED
+    prefill_done: int = 0                     # prompt tokens already paged in
+    generated: List[int] = dataclasses.field(default_factory=list)
+    table: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    shared_blocks: int = 0                    # CoW prefix-cache blocks reused
+    spilled_blocks: int = 0                   # pages parked in the cold tier
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.FINISHED, RequestState.CANCELLED,
+                              RequestState.REJECTED)
+
+    @property
+    def archive_key(self):
+        return ("req", self.rid)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_slots: int = 4                 # decode batch width (static for jit)
+    max_queue: int = 64                # admission control: beyond this, reject
+    prefill_chunk: int = 32            # tokens per chunked-prefill step
+    prefill_chunks_per_step: int = 1   # prefill/decode interleave budget
+    watermark_blocks: int = 1          # admission headroom for decode growth
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine iteration, as decided by :meth:`ContinuousScheduler.schedule`."""
+    prefill: List[Request] = dataclasses.field(default_factory=list)
+    decode: List[Request] = dataclasses.field(default_factory=list)
+    admitted: List[Request] = dataclasses.field(default_factory=list)
+    resumed: List[Request] = dataclasses.field(default_factory=list)
+    preempted: List[Request] = dataclasses.field(default_factory=list)
+
+
+class ContinuousScheduler:
+    def __init__(self, cfg: SchedulerConfig, blocks: BlockManager,
+                 block_size: int, max_blocks_per_req: int, *,
+                 spill: Callable[[Request], None] = lambda r: None,
+                 restore: Callable[[Request], List[int]] = lambda r: list(r.table),
+                 reclaim: Callable[[int], int] = lambda n: 0,
+                 prefix: Callable[[Request], List[int]] = lambda r: [],
+                 retain: Callable[[Request], None] = lambda r: None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.cfg = cfg
+        self.blocks = blocks
+        self.block_size = block_size
+        self.max_blocks_per_req = max_blocks_per_req
+        self._spill = spill
+        self._restore = restore
+        self._reclaim = reclaim
+        self._prefix = prefix
+        self._retain = retain
+        self._clock = clock
+        self.queue: Deque[Request] = deque()
+        self.active: List[Request] = []    # PREFILLING + RUNNING, FCFS order
+        self.requests: Dict[int, Request] = {}
+        self._rid = itertools.count()
+        self._free_slots = list(range(cfg.max_slots - 1, -1, -1))
+        self.counters = {"preemptions": 0, "prefix_hits": 0, "rejected": 0}
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int, *,
+               temperature: float = 0.0, eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> Request:
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      eos_id=eos_id,
+                      arrival=self._clock() if arrival is None else arrival)
+        self.requests[req.rid] = req
+        need = blocks_for(req.prompt_len + max_new_tokens, self.block_size)
+        if (not req.prompt or max_new_tokens < 1
+                or need > self.max_blocks_per_req
+                or need + self.cfg.watermark_blocks > self.blocks.num_total
+                or len(self.queue) >= self.cfg.max_queue):
+            req.state = RequestState.REJECTED     # can never (or won't) fit
+            self.counters["rejected"] += 1
+            return req
+        self.queue.append(req)
+        return req
+
+    def cancel(self, rid: int) -> bool:
+        req = self.requests.get(rid)
+        if req is None or req.done:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+        if req in self.active:
+            self._release(req)
+        elif req.table:
+            # still queued but already holding blocks (prefix-cache fork
+            # from an admission attempt that broke on pool pressure)
+            self.blocks.free([b for b in req.table if b])
+            req.table = []
+        if req.state == RequestState.PREEMPTED:
+            self.blocks.archive.discard(req.archive_key)
+        req.state = RequestState.CANCELLED
+        req.t_finish = self._clock()
+        return True
+
+    # -- the per-iteration decision ----------------------------------------
+    def schedule(self) -> StepPlan:
+        plan = StepPlan()
+        self._admit(plan)
+        self._plan_prefill(plan)
+        self._plan_decode(plan)
+        return plan
+
+    def _ensure_free(self, n: int) -> bool:
+        if not self.blocks.can_alloc(n):
+            self._reclaim(n - self.blocks.num_free)
+        return self.blocks.can_alloc(n)
+
+    def _admit(self, plan: StepPlan) -> None:
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            if req.state is RequestState.PREEMPTED:
+                # resume from the cold tier: pages come back, not recompute.
+                # The watermark headroom prevents resume/preempt thrash: a
+                # resumed request must have room to actually decode.
+                if not self._ensure_free(req.spilled_blocks
+                                         + self.cfg.watermark_blocks):
+                    break                       # strict FCFS: don't skip ahead
+                try:
+                    req.table = self._restore(req)
+                except NoFreeBlocks:
+                    break
+                req.spilled_blocks = 0
+                self.queue.popleft()
+                req.slot = self._free_slots.pop()
+                req.state = RequestState.RUNNING
+                self.active.append(req)
+                plan.resumed.append(req)
+                continue
+            if not req.table and not req.shared_blocks:
+                shared = self._prefix(req)      # CoW prefix-cache fork
+                if shared:
+                    req.table = list(shared)
+                    req.shared_blocks = len(shared)
+                    req.prefill_done = len(shared) * self.block_size
+                    self.counters["prefix_hits"] += 1
+            need = blocks_for(req.prompt_len, self.block_size) \
+                - req.shared_blocks
+            if not self._ensure_free(need + self.cfg.watermark_blocks):
+                break                           # strict FCFS admission
+            self.queue.popleft()
+            req.table = req.table + self.blocks.alloc(need)
+            req.slot = self._free_slots.pop()
+            req.state = RequestState.PREFILLING
+            self.active.append(req)
+            plan.admitted.append(req)
+
+    def _plan_prefill(self, plan: StepPlan) -> None:
+        budget = self.cfg.prefill_chunks_per_step
+        for req in self.active:
+            if budget == 0:
+                break
+            if req.state is RequestState.PREFILLING:
+                plan.prefill.append(req)
+                budget -= 1
+
+    def _plan_decode(self, plan: StepPlan) -> None:
+        runners = [r for r in self.active if r.state is RequestState.RUNNING]
+        survivors: List[Request] = []
+        for req in runners:
+            if req.state is not RequestState.RUNNING:
+                continue                        # preempted as a victim below
+            # the step writes generated[-1]'s KV at position total_len - 1
+            need = blocks_for(req.total_len, self.block_size)
+            while req is not None and len(req.table) < need:
+                if self._ensure_free(1):
+                    req.table.extend(self.blocks.alloc(1))
+                    continue
+                victim = self._pick_victim(runners)
+                if victim is None or victim is req:
+                    self._preempt(req, plan)
+                    req = None
+                else:
+                    self._preempt(victim, plan)
+                    if victim in survivors:
+                        survivors.remove(victim)
+            if req is not None:
+                survivors.append(req)
+        plan.decode.extend(survivors)
+
+    def _pick_victim(self, runners) -> Optional[Request]:
+        """Preempt the youngest runner (latest arrival, FCFS-fair)."""
+        candidates = [r for r in runners if r.state is RequestState.RUNNING]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda r: (r.arrival, r.rid))
+
+    def _preempt(self, req: Request, plan: StepPlan) -> None:
+        req.spilled_blocks = len([b for b in req.table if b])
+        self._spill(req)                        # pages -> host archive + free
+        req.table = []
+        self._release(req, free_blocks=False)   # spill already freed them
+        req.state = RequestState.PREEMPTED
+        self.queue.appendleft(req)              # front: oldest-first resume
+        plan.preempted.append(req)
+        self.counters["preemptions"] += 1
+
+    def _release(self, req: Request, *, free_blocks: bool = True) -> None:
+        if free_blocks and req.table:
+            self.blocks.free([b for b in req.table if b])
+            req.table = []
+        if req.slot >= 0:
+            self._free_slots.append(req.slot)
+            req.slot = -1
+        if req in self.active:
+            self.active.remove(req)
+
+    # -- completion callbacks (invoked by the runtime) ---------------------
+    def on_prefill_chunk(self, req: Request, n_tokens: int) -> None:
+        req.prefill_done += n_tokens
+        assert req.prefill_done <= req.prompt_len
+
+    def on_prompt_complete(self, req: Request, first_token: int) -> None:
+        req.state = RequestState.RUNNING
+        req.t_first_token = self._clock()
+        req.generated.append(first_token)
+        self._maybe_finish(req)
+
+    def on_decode_token(self, req: Request, token: int) -> None:
+        req.generated.append(token)
+        if req.t_first_token is None:
+            req.t_first_token = self._clock()
+        self._maybe_finish(req)
+
+    def _maybe_finish(self, req: Request) -> None:
+        hit_eos = req.eos_id is not None and req.generated[-1] == req.eos_id
+        if len(req.generated) >= req.max_new_tokens or hit_eos:
+            self._retain(req)                   # prefix cache gets its fork
+            self._release(req)
+            req.state = RequestState.FINISHED
+            req.t_finish = self._clock()
+
+    # -- introspection -----------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "queued": len(self.queue),
+            "prefilling": sum(1 for r in self.active
+                              if r.state is RequestState.PREFILLING),
+            "running": sum(1 for r in self.active
+                           if r.state is RequestState.RUNNING),
+            "finished": sum(1 for r in self.requests.values()
+                            if r.state is RequestState.FINISHED),
+            "preempted_now": sum(1 for r in self.queue
+                                 if r.state is RequestState.PREEMPTED),
+            "block_occupancy": self.blocks.occupancy(),
+            "free_blocks": self.blocks.num_free,
+            **self.counters,
+        }

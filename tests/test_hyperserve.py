@@ -1,0 +1,186 @@
+"""HyperServe end-to-end: continuous batching == sequential Generator.
+
+The load-bearing property: under staggered arrivals, chunked prefill,
+paged KV, preemption and prefix sharing, greedy outputs must match the
+fixed-batch ``Generator`` token-for-token (float32 configs so fp drift
+cannot flip an argmax).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ServeConfig, get_config
+from repro.models import model as M
+from repro.serve.api import HyperServe, RequestRejected
+from repro.serve.engine import GenerateConfig, Generator
+from tests.conftest import run_subprocess
+
+
+@pytest.fixture(scope="module")
+def qwen_f32():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def baseline(cfg, params, prompt, max_new):
+    gen = Generator(cfg, params, max_len=128)
+    out = gen.generate(jnp.asarray(prompt, jnp.int32)[None, :],
+                       GenerateConfig(max_new_tokens=max_new))
+    return out[0, len(prompt):].tolist()
+
+
+def test_staggered_arrivals_match_generator(qwen_f32):
+    cfg, params = qwen_f32
+    prompts = [list(range(1, 9)), list(range(20, 33)),
+               list(range(5, 10)), list(range(40, 47))]
+    max_new = [6, 4, 8, 5]
+    want = [baseline(cfg, params, p, mn) for p, mn in zip(prompts, max_new)]
+
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=3, prefill_chunk=4)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    rids = [serve.submit(prompts[0], max_new[0]),
+            serve.submit(prompts[1], max_new[1])]
+    for _ in range(3):                       # stagger: arrive mid-flight
+        serve.step_once()
+    rids += [serve.submit(prompts[2], max_new[2]),
+             serve.submit(prompts[3], max_new[3])]
+    out = serve.join()
+    for i, rid in enumerate(rids):
+        assert out[rid] == want[i], f"request {i} diverged"
+    st = serve.stats()
+    assert st["finished"] == 4 and st["running"] == 0
+    assert st["block_occupancy"] < 1.0
+
+
+def test_preemption_spill_restore_exact(qwen_f32):
+    """Pool pressure forces a spill to host + restore; outputs still exact."""
+    cfg, params = qwen_f32
+    prompts = [list(range(1, 5)), list(range(7, 11))]
+    want = [baseline(cfg, params, p, 8) for p in prompts]
+    scfg = ServeConfig(block_size=2, num_blocks=9, max_blocks_per_req=6,
+                       max_slots=2, prefill_chunk=4,
+                       enable_prefix_cache=False)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    rids = [serve.submit(p, 8) for p in prompts]
+    out = serve.join()
+    st = serve.stats()
+    assert st["preemptions"] >= 1, "test must actually exercise preemption"
+    for i, rid in enumerate(rids):
+        assert out[rid] == want[i]
+
+
+def test_prefix_cache_cow_exact(qwen_f32):
+    """An identical prompt forks cached CoW blocks and still matches."""
+    cfg, params = qwen_f32
+    prompt = list(range(1, 9))
+    want = baseline(cfg, params, prompt, 6)
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=2, prefill_chunk=4,
+                       enable_prefix_cache=True, prefix_cache_blocks=8)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    first = serve.submit(prompt, 6)
+    serve.join()
+    second = serve.submit(prompt, 6)
+    out = serve.join()
+    assert serve.stats()["prefix_hits"] == 1
+    assert out[second] == want == serve.result(first)
+
+
+def test_cancel_and_rejection(qwen_f32):
+    cfg, params = qwen_f32
+    scfg = ServeConfig(block_size=4, num_blocks=16, max_blocks_per_req=4,
+                       max_slots=2, max_queue=2, prefill_chunk=4)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    with pytest.raises(RequestRejected):     # can never fit the table width
+        serve.submit(list(range(1, 40)), 8)
+    rid = serve.submit([1, 2, 3, 4], 10)     # would run long
+    serve.step_once()
+    assert serve.cancel(rid)
+    assert serve.state(rid) == "cancelled"
+    assert serve.engine.blocks.num_free == serve.engine.blocks.num_total
+    # engine drains cleanly after a cancel
+    rid2 = serve.submit([1, 2, 3, 4], 3)
+    out = serve.join()
+    assert len(out[rid2]) == 3
+
+
+def test_streaming_api(qwen_f32):
+    cfg, params = qwen_f32
+    want = baseline(cfg, params, [1, 2, 3, 4, 5], 5)
+    serve = HyperServe(cfg, params, serve_cfg=ServeConfig(
+        block_size=4, num_blocks=16, max_blocks_per_req=4, max_slots=2,
+        prefill_chunk=4))
+    rid = serve.submit([1, 2, 3, 4, 5], 5)
+    assert list(serve.stream(rid)) == want
+
+
+def test_serve_on_forced_8device_mesh():
+    """Sharded continuous batching (8-dev mesh) matches the 1-device run."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.base import get_config, ServeConfig
+from repro.core.hypershard import ShardingPlan
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+gen = Generator(cfg, params, max_len=64)
+prompts = [list(range(1, 9)), list(range(20, 33))]
+want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                     GenerateConfig(max_new_tokens=5))[0, len(p):].tolist()
+        for p in prompts]
+
+mesh = make_host_mesh((1, 8))
+scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                   max_slots=2, prefill_chunk=4)
+serve = HyperServe(cfg, params, serve_cfg=scfg, mesh=mesh,
+                   plan=ShardingPlan(fsdp=None))
+rids = [serve.submit(p, 5) for p in prompts]
+out = serve.join()
+for i, rid in enumerate(rids):
+    assert out[rid] == want[i], (i, out[rid], want[i])
+print("MESH8-SERVE-OK")
+""", devices=8, timeout=1200)
+
+
+def test_disaggregated_prefill_decode_roles():
+    """Prefill/decode role split (HyperMPMD): prefill workers compute the
+    prompt, pages transfer to the decode workers' pool, outputs exact."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.base import get_config, ServeConfig
+from repro.core.mpmd import serving_groups
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+gen = Generator(cfg, params, max_len=64)
+prompts = [list(range(1, 9)), list(range(5, 10))]
+want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                     GenerateConfig(max_new_tokens=5))[0, len(p):].tolist()
+        for p in prompts]
+
+groups = serving_groups(4, 4)
+scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                   max_slots=2, prefill_chunk=8)
+serve = HyperServe(cfg, params, serve_cfg=scfg,
+                   prefill_group=groups["prefill"],
+                   decode_group=groups["decode"])
+rids = [serve.submit(p, 5) for p in prompts]
+out = serve.join()
+for i, rid in enumerate(rids):
+    assert out[rid] == want[i], (i, out[rid], want[i])
+print("DISAGG-SERVE-OK")
+""", devices=8, timeout=1200)

@@ -69,7 +69,7 @@ mesh = jax.make_mesh((1, 2), ("data", "model"),
 sh = {"w": NamedSharding(mesh, P(None, "model"))}
 x = {"w": jnp.arange(64.0).reshape(8, 8)}
 host = jax.device_put(x, off.host_shardings(sh))
-assert host["w"].sharding.memory_kind == "pinned_host"
+assert host["w"].sharding.memory_kind == off.host_memory_kind()
 
 @jax.jit
 def use(h):
@@ -102,7 +102,7 @@ step, sh = steps_mod.make_train_step(cfg, mesh, plan, opt_mod.AdamWConfig(),
 params, opt = steps_mod.init_state(cfg, mesh, plan, offload_cfg=ocfg)
 kinds = [l.sharding.memory_kind for l in jax.tree.leaves(params)]
 # large (fully-sharded) leaves live on host; replicated norms stay in HBM
-assert kinds.count("pinned_host") > len(kinds) * 0.4
+assert kinds.count(off.host_memory_kind()) > len(kinds) * 0.4
 batch = next(make_loader(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
                                     global_batch=2), mesh))
 for i in range(2):

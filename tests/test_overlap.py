@@ -22,8 +22,8 @@ def test_overlap_efficiency_model():
 def test_collective_matmul_matches_plain():
     run_subprocess("""
 import jax, jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.core.compat import shard_map
 from repro.core.overlap import collective_matmul_allgather
 mesh = jax.make_mesh((4,), ("model",),
                      axis_types=(jax.sharding.AxisType.Auto,))

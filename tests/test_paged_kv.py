@@ -1,0 +1,153 @@
+"""Paged KV block manager: alloc/free/CoW/spill invariants (HyperServe)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.serve.paged_kv import (BlockManager, NoFreeBlocks, PagedKVConfig,
+                                  PagedKVPool, blocks_for)
+
+
+def _mgr(num_blocks=8, block_size=4):
+    return BlockManager(PagedKVConfig(block_size=block_size,
+                                      num_blocks=num_blocks))
+
+
+def test_blocks_for():
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+    assert blocks_for(16, 4) == 4
+
+
+def test_alloc_free_invariants():
+    m = _mgr(num_blocks=8)
+    assert m.num_total == 7                    # null block excluded
+    a = m.alloc(3)
+    b = m.alloc(2)
+    assert len(set(a) | set(b)) == 5           # all distinct
+    assert 0 not in a + b                      # null block never handed out
+    assert m.num_free == 2
+    assert 0.0 < m.occupancy() <= 1.0
+    m.free(a)
+    assert m.num_free == 5
+    m.free(b)
+    assert m.num_free == 7
+    assert m.occupancy() == 0.0
+
+
+def test_alloc_exhaustion_raises_and_preserves_state():
+    m = _mgr(num_blocks=4)
+    m.alloc(3)
+    assert not m.can_alloc(1)
+    with pytest.raises(NoFreeBlocks):
+        m.alloc(1)
+    assert m.num_free == 0
+
+
+def test_double_free_asserts():
+    m = _mgr()
+    [b] = m.alloc(1)
+    m.free([b])
+    with pytest.raises(AssertionError):
+        m.free([b])
+
+
+def test_freeing_null_block_is_noop():
+    m = _mgr()
+    free0 = m.num_free
+    m.free([0])
+    assert m.num_free == free0
+
+
+def test_cow_fork_and_refcounts():
+    m = _mgr(num_blocks=8)
+    table = m.alloc(3)
+    shared = m.fork(table)
+    assert shared == table
+    assert all(m.refcount(b) == 2 for b in table)
+    assert all(m.is_shared(b) for b in table)
+    # one owner frees: blocks stay allocated for the other
+    m.free(table)
+    assert all(m.refcount(b) == 1 for b in table)
+    assert m.num_free == 4
+    m.free(shared)
+    assert m.num_free == 7
+
+
+def test_cow_write_fault_copies_shared_block():
+    m = _mgr(num_blocks=8)
+    table = m.alloc(2)
+    fork = m.fork(table)
+    copies = []
+    new_table, wb = m.ensure_writable(fork, 1, lambda s, d: copies.append((s, d)))
+    assert copies == [(table[1], wb)]
+    assert wb != table[1]                       # repointed to a fresh block
+    assert new_table[0] == table[0]             # untouched entry still shared
+    assert m.refcount(table[1]) == 1            # old block back to one owner
+    assert m.refcount(wb) == 1
+    # exclusively-owned block: no copy, no repoint
+    solo = m.alloc(1)
+    new2, wb2 = m.ensure_writable(solo, 0, lambda s, d: copies.append(0))
+    assert wb2 == solo[0] and len(copies) == 1
+
+
+def test_spill_restore_roundtrip_preserves_pages():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    pcfg = PagedKVConfig(block_size=2, num_blocks=8, max_blocks_per_req=4,
+                         dtype="float32")
+    pool = PagedKVPool(cfg, pcfg, dtype=jnp.float32)
+    m = BlockManager(pcfg)
+    table = m.alloc(2)
+    # write recognisable content into the pages
+    marked = jax.tree.map(
+        lambda a: a.at[:, jnp.asarray(table)].set(1.5), pool.kv)
+    pool.kv = marked
+    want = jax.tree.leaves(pool.extract_pages(table))[0]
+
+    m.spill(("req", 0), table, pool.extract_pages)
+    assert m.num_free == 7                      # blocks returned to pool
+    assert m.archive.nbytes() > 0
+    # dirty the (now free) blocks to prove restore really rewrites them
+    pool.kv = jax.tree.map(lambda a: a * 0, pool.kv)
+
+    new_table = m.restore(("req", 0), pool.insert_pages)
+    assert len(new_table) == 2
+    got = jax.tree.leaves(pool.extract_pages(new_table))[0]
+    assert (got == want).all()
+    assert m.archive.nbytes() == 0              # archive entry consumed
+
+
+def test_restore_without_space_keeps_archive():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    pcfg = PagedKVConfig(block_size=2, num_blocks=4, max_blocks_per_req=4,
+                         dtype="float32")
+    pool = PagedKVPool(cfg, pcfg, dtype=jnp.float32)
+    m = BlockManager(pcfg)
+    table = m.alloc(2)
+    m.spill(("req", 1), table, pool.extract_pages)
+    m.alloc(3)                                  # someone else took the pool
+    with pytest.raises(NoFreeBlocks):
+        m.restore(("req", 1), pool.insert_pages)
+    assert m.spilled(("req", 1))                # entry still intact
+
+
+def test_paged_pool_rejects_non_attention_archs():
+    cfg = get_config("mamba2-370m").reduced()
+    with pytest.raises(ValueError, match="attention mixers only"):
+        PagedKVPool(cfg, PagedKVConfig())
+
+
+def test_pool_hbm_accounting():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    pcfg = PagedKVConfig(block_size=4, num_blocks=16, dtype="float32")
+    pool = PagedKVPool(cfg, pcfg, dtype=jnp.float32)
+    # 2 layers x (k + v) x N x bs x KV x hd x 4 bytes
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    want = cfg.num_layers * 2 * 16 * 4 * kv * hd * 4
+    assert pool.hbm_bytes() == want

@@ -1,0 +1,186 @@
+"""Continuous-batching scheduler: admission, interleave, preemption order."""
+from typing import List
+
+import pytest
+
+from repro.serve.paged_kv import BlockManager, PagedKVConfig
+from repro.serve.scheduler import (ContinuousScheduler, RequestState,
+                                   SchedulerConfig)
+
+
+def make_sched(num_blocks=16, block_size=4, max_slots=2, max_queue=8,
+               prefill_chunk=4, chunks_per_step=1, watermark=1, **cb):
+    pcfg = PagedKVConfig(block_size=block_size, num_blocks=num_blocks,
+                         max_blocks_per_req=8)
+    blocks = BlockManager(pcfg)
+    clock = iter(range(10_000))
+    sched = ContinuousScheduler(
+        SchedulerConfig(max_slots=max_slots, max_queue=max_queue,
+                        prefill_chunk=prefill_chunk,
+                        prefill_chunks_per_step=chunks_per_step,
+                        watermark_blocks=watermark),
+        blocks, block_size, pcfg.max_blocks_per_req,
+        clock=lambda: next(clock), **cb)
+    return sched, blocks
+
+
+def drive_prefill(sched, plan, first_token=7):
+    """Simulate the runtime executing the planned prefill chunks."""
+    for req in plan.prefill:
+        n = min(sched.cfg.prefill_chunk, req.prompt_len - req.prefill_done)
+        sched.on_prefill_chunk(req, n)
+        if req.prefill_done == req.prompt_len:
+            sched.on_prompt_complete(req, first_token)
+
+
+def test_fcfs_admission_respects_slots():
+    sched, _ = make_sched(max_slots=2)
+    r = [sched.submit([1] * 4, 4) for _ in range(3)]
+    plan = sched.schedule()
+    assert [q.rid for q in plan.admitted] == [r[0].rid, r[1].rid]
+    assert r[2].state is RequestState.QUEUED         # no slot left
+    assert r[0].slot != r[1].slot
+    assert all(q.state is RequestState.PREFILLING for q in plan.admitted)
+
+
+def test_admission_control_rejects():
+    sched, _ = make_sched(max_queue=2)
+    assert sched.submit([], 4).state is RequestState.REJECTED   # empty
+    big = sched.submit([1] * 100, 4)                 # exceeds table width
+    assert big.state is RequestState.REJECTED
+    sched.submit([1] * 4, 4)
+    sched.submit([1] * 4, 4)
+    overflow = sched.submit([1] * 4, 4)              # queue bound
+    assert overflow.state is RequestState.REJECTED
+    assert sched.counters["rejected"] == 3
+
+
+def test_chunked_prefill_budget_and_interleave():
+    # prompt of 8 with chunk 4 -> two prefill steps; decode of an already-
+    # running request is scheduled in the SAME iterations (no starvation)
+    sched, _ = make_sched(max_slots=2, prefill_chunk=4, chunks_per_step=1)
+    fast = sched.submit([1] * 4, 8)
+    plan = sched.schedule()
+    drive_prefill(sched, plan)                       # fast fully prefilled
+    assert fast.state is RequestState.RUNNING
+    slow = sched.submit([2] * 8, 4)
+    seen_decode_during_prefill = 0
+    for _ in range(2):
+        plan = sched.schedule()
+        assert len(plan.prefill) <= 1                # budget respected
+        if slow in plan.prefill and fast in plan.decode:
+            seen_decode_during_prefill += 1
+        drive_prefill(sched, plan)
+        for req in plan.decode:
+            sched.on_decode_token(req, 5)
+    assert seen_decode_during_prefill == 2           # interleaved, not starved
+    assert slow.state is RequestState.RUNNING
+
+
+def test_decode_allocates_growth_block():
+    sched, blocks = make_sched(block_size=4)
+    req = sched.submit([1] * 4, 8)                   # 1 block prompt
+    plan = sched.schedule()
+    drive_prefill(sched, plan)
+    assert len(req.table) == 1
+    for i in range(4):                               # generate to pos 4..7
+        plan = sched.schedule()
+        for r in plan.decode:
+            sched.on_decode_token(r, 5)
+    assert len(req.table) == 2                       # grew exactly one block
+
+
+def test_preemption_picks_youngest_and_resumes_fcfs():
+    spilled: List[int] = []
+    restored: List[int] = []
+
+    def spill(req):
+        spilled.append(req.rid)
+        req_blocks = [b for b in req.table if b]
+        sched.blocks.free(req_blocks)
+
+    def restore(req):
+        restored.append(req.rid)
+        return sched.blocks.alloc(req.spilled_blocks)
+
+    # 7 usable blocks, bs=2: two requests of prompt 4 (2 blocks each) that
+    # each want 6 more tokens -> combined demand exceeds the pool
+    sched, blocks = make_sched(num_blocks=8, block_size=2, max_slots=2,
+                               watermark=1, spill=spill, restore=restore)
+    old = sched.submit([1] * 4, 6, arrival=0.0)
+    young = sched.submit([2] * 4, 6, arrival=1.0)
+    for _ in range(2):                               # one chunk budget/step
+        drive_prefill(sched, sched.schedule())
+    assert {old.state, young.state} == {RequestState.RUNNING}
+
+    preempted_at = None
+    for i in range(16):
+        plan = sched.schedule()
+        if plan.preempted:
+            preempted_at = i
+            assert plan.preempted == [young]         # youngest loses its seat
+            assert young.state is RequestState.PREEMPTED
+            assert sched.queue[0] is young           # parked at queue front
+        for r in plan.decode:
+            sched.on_decode_token(r, 5)
+        if old.done and young.done:
+            break
+    assert preempted_at is not None
+    assert spilled == [young.rid]
+    assert restored == [young.rid]                   # resumed via page restore
+    assert old.state is RequestState.FINISHED
+    assert young.state is RequestState.FINISHED
+    assert len(old.generated) == 6 and len(young.generated) == 6
+    assert sched.counters["preemptions"] == 1
+
+
+def test_cancel_releases_blocks_and_slot():
+    sched, blocks = make_sched()
+    req = sched.submit([1] * 8, 4)
+    sched.schedule()
+    assert blocks.num_free < blocks.num_total
+    assert sched.cancel(req.rid)
+    assert req.state is RequestState.CANCELLED
+    assert blocks.num_free == blocks.num_total
+    assert not sched.cancel(req.rid)                 # idempotent
+    # the freed slot is reusable immediately
+    nxt = sched.submit([1] * 4, 4)
+    plan = sched.schedule()
+    assert nxt in plan.admitted
+
+
+def test_cancel_queued_request_releases_forked_prefix_blocks():
+    """A request can hold CoW-forked blocks while still queued (prefix hit
+    followed by admission failure); cancel must drop those refs."""
+    sched, blocks = make_sched(num_blocks=8, block_size=4, max_slots=1)
+    cached = blocks.alloc(1)
+    sched._prefix = lambda req: blocks.fork(cached)
+    blocks.alloc(5)                                  # leave only 1 free
+    req = sched.submit([1] * 12, 4)                  # needs 2 more + watermark
+    sched.schedule()
+    assert req.state is RequestState.QUEUED
+    assert req.shared_blocks == 1
+    assert blocks.refcount(cached[0]) == 2           # fork happened
+    assert sched.cancel(req.rid)
+    assert blocks.refcount(cached[0]) == 1           # fork released
+    assert req.table == []
+
+
+def test_eos_finishes_early():
+    sched, _ = make_sched()
+    req = sched.submit([1] * 4, 20, eos_id=9)
+    plan = sched.schedule()
+    drive_prefill(sched, plan)
+    plan = sched.schedule()
+    sched.on_decode_token(req, 9)                    # eos
+    assert req.state is RequestState.FINISHED
+    assert len(req.generated) == 2
+
+
+def test_stats_shape():
+    sched, _ = make_sched()
+    sched.submit([1] * 4, 4)
+    st = sched.stats()
+    for key in ("queued", "running", "prefilling", "finished",
+                "block_occupancy", "free_blocks", "preemptions"):
+        assert key in st
