@@ -1,0 +1,16 @@
+# Tooling entry points. `make check` is the fast CI gate: byte-compile
+# everything, smoke the public session API (tools/check_api.py), then run
+# the pytest smoke marker. `make test` is the full tier-1 suite.
+PY ?= python
+
+.PHONY: check test compile
+
+compile:
+	$(PY) -m compileall -q src tools examples benchmarks
+
+check: compile
+	$(PY) tools/check_api.py
+	$(PY) -m pytest -q -m smoke
+
+test:
+	$(PY) -m pytest -x -q

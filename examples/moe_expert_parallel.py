@@ -4,27 +4,28 @@
 
 Runs a DeepSeekMoE-style reduced model through (a) the GShard capacity
 dispatch (paper-era baseline) and (b) the beyond-paper ragged dispatch,
-comparing loss trajectories and step times on this machine.  On a real
-mesh the same code runs expert-parallel via the HyperShard plan — see
+comparing loss trajectories and step times on this machine.  The session
+plan declares expert placement (``moe_weights="ep"`` pairs experts with
+the TP axis); on a real mesh the same two lines run expert-parallel — see
 tests/test_mpmd.py::test_multidevice_train_step_with_hypershard.
 """
-import sys
 import time
 
-sys.path.insert(0, "src")
-
+from repro.api import Supernode, plans
 from repro.configs.base import ShapeConfig, get_config
 from repro.optim.adamw import AdamWConfig
-from repro.train.trainer import TrainConfig, train
+from repro.train.trainer import TrainConfig
 
 
 def main():
     cfg = get_config("deepseek-moe-16b").reduced()
     shape = ShapeConfig("moe-demo", 64, 4, "train")
+    session = Supernode.auto()
+    plan = plans.fsdp_tp(moe_weights="ep")
     for dispatch in ("gshard", "ragged"):
         t0 = time.perf_counter()
-        _, hist = train(
-            cfg, shape, moe_dispatch=dispatch,
+        _, hist = session.train(
+            cfg, shape, plan=plan, moe_dispatch=dispatch,
             train_cfg=TrainConfig(num_steps=20, log_every=10),
             adamw=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=20))
         dt = time.perf_counter() - t0

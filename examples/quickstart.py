@@ -1,19 +1,18 @@
-"""Quickstart: train a small model end-to-end with the public API.
+"""Quickstart: the Supernode session API end-to-end.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen2-0.5b] [--steps 30]
 
-Uses the reduced config so it runs on CPU in ~a minute; swap
+One session object owns the device matrix; one declarative HyperPlan
+describes the strategy; ``explain`` shows how it resolves before anything
+compiles.  Uses the reduced config so it runs on CPU in ~a minute; swap
 ``--full`` on real hardware to train the exact assigned config.
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
+from repro.api import Supernode, plans
 from repro.configs.base import ShapeConfig, get_config
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import GenerateConfig, Generator
-from repro.train.trainer import TrainConfig, train
+from repro.train.trainer import TrainConfig
 
 
 def main():
@@ -28,19 +27,25 @@ def main():
         cfg = cfg.reduced()
     shape = ShapeConfig("quickstart", 64, 4, "train")
 
+    session = Supernode.auto()
+    plan = plans.fsdp_tp()
+    report = session.explain(plan, cfg)
+    c = report.coverage()
+    print(f"{session}: plan '{plan.name}' resolves {c['param']} param + "
+          f"{c['cache']} cache leaves, {c['fallbacks']} fallbacks")
+
     print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params reduced)")
-    params, hist = train(
-        cfg, shape,
+    params, hist = session.train(
+        cfg, shape, plan=plan,
         train_cfg=TrainConfig(num_steps=args.steps, log_every=5),
         adamw=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=args.steps),
         hook=lambda m: print(f"  step {m['step']:4d} loss {m['loss']:.4f} "
                              f"lr {m['lr']:.2e} ({m['wall_s']:.1f}s)"))
     print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
 
-    import jax.numpy as jnp
-    gen = Generator(cfg, params, max_len=96)
-    out = gen.generate(jnp.ones((1, 8), jnp.int32),
-                       GenerateConfig(max_new_tokens=16))
+    import numpy as np
+    out = session.generate(cfg, params, np.ones((1, 8), np.int32),
+                           max_new_tokens=16)
     print("sampled token ids:", out[0, 8:].tolist())
 
 

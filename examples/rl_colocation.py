@@ -5,17 +5,15 @@
 A miniature sample-evaluate-update loop (the paper's §3.3c workload):
 an ACTOR group generates rollouts with the serving engine while a LEARNER
 group trains on them, both driven by the single-controller MPMDScheduler.
-Weight sync is an explicit cross-group transfer.  On one CPU device the
-groups colocate; the scheduling/transfer machinery is identical on a real
-supernode (see the node-to-module mapping, paper Listing 1).
+The Supernode session owns the node-to-module mapping (paper Listing 1)
+and the scheduler; weight sync is an explicit cross-group transfer.  On
+one CPU device the groups colocate; the scheduling/transfer machinery is
+identical on a real supernode.
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 import jax.numpy as jnp
 
+from repro.api import Supernode
 from repro.configs.base import get_config
 from repro.core import mpmd
 from repro.models import model as M
@@ -26,15 +24,15 @@ from repro.train import steps as steps_mod
 
 def main():
     cfg = get_config("qwen2-0.5b").reduced()
+    session = Supernode()            # single-controller over local devices
 
     # node-to-module mapping (paper Listing 1); 1 CPU device -> colocated
-    n = len(jax.devices())
-    mapping = {"learner": max(1, n // 2)}
-    groups = mpmd.groups_from_mapping(mapping)
+    n = session.num_devices
+    groups = session.groups({"learner": max(1, n // 2)})
     groups["actor"] = groups["learner"] if n == 1 else \
-        mpmd.groups_from_mapping({"actor": n - n // 2},
-                                 devices=jax.devices()[n // 2:])["actor"]
-    sched = mpmd.MPMDScheduler(groups)
+        session.groups({"actor": n - n // 2},
+                       devices=session.devices[n // 2:])["actor"]
+    sched = session.scheduler(groups)
 
     params = M.init_model(cfg, jax.random.PRNGKey(0))
     opt = opt_mod.init_adamw(params)

@@ -2,39 +2,38 @@
 
     PYTHONPATH=src python examples/serve_offload.py
 
-1. Batched prefill+decode serving with the standard engine.
+1. Batched prefill+decode serving through the Supernode session.
 2. The HyperOffload KV pool: decode attention over a cache whose cold
    majority lives in host memory (the paper's 71K->123K mechanism),
    verified against the flat-cache reference.
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 import jax.numpy as jnp
 
+from repro.api import Supernode
 from repro.configs.base import get_config
 from repro.core.kvcache import KVCachePool, KVPoolConfig
 from repro.kernels import ref
 from repro.models import model as M
-from repro.serve.engine import GenerateConfig, Generator
 
 
 def main():
     cfg = get_config("granite-3-2b").reduced()
     params = M.init_model(cfg, jax.random.PRNGKey(0))
+    session = Supernode.auto()
 
     # 1. batched serving
-    gen = Generator(cfg, params, max_len=128)
     prompts = jnp.ones((4, 16), jnp.int32)
-    out = gen.generate(prompts, GenerateConfig(max_new_tokens=24,
-                                               temperature=0.8))
+    out = session.generate(cfg, params, prompts, max_new_tokens=24,
+                           temperature=0.8, max_len=128)
     print(f"served batch of {out.shape[0]}: {out.shape[1]} tokens each")
 
     # 2. hierarchical KV pool
+    # float32 pool to match the float32 probe tensors below (the model's
+    # own serving path uses the config dtype)
     pool = KVCachePool(cfg, batch=2, max_len=2048,
-                       pool=KVPoolConfig(hot_window=64, block=32))
+                       pool=KVPoolConfig(hot_window=64, block=32,
+                                         dtype="float32"))
     KV, hd, H = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
     key = jax.random.PRNGKey(1)
     kts, vts = [], []

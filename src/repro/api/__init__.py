@@ -1,0 +1,26 @@
+"""repro.api — the public session layer (one declarative front door).
+
+    from repro.api import Supernode, HyperPlan, plans
+
+    session = Supernode.auto()
+    params, hist = session.train(cfg, shape, plan=plans.fsdp_tp())
+    serve = session.serve(cfg, params, plan=plans.serve_disagg())
+    print(session.explain(plans.offload_all(), cfg))
+
+Everything else in the repo (hypershard, offload, mpmd, serve, train) is
+an engine this layer resolves plans into; new entry points go through
+here (see ROADMAP.md).
+"""
+from repro.api.errors import (HostMemoryError, IndivisibleError, PlanError,
+                              ServePlanError, TopologyError, UnknownAxisError)
+from repro.api.explain import LeafReport, PlanReport, explain
+from repro.api.plan import HyperPlan
+from repro.api.session import Resolution, Supernode
+from repro.api import plans
+
+__all__ = [
+    "HyperPlan", "Supernode", "Resolution", "plans", "explain",
+    "PlanReport", "LeafReport",
+    "PlanError", "UnknownAxisError", "IndivisibleError", "HostMemoryError",
+    "ServePlanError", "TopologyError",
+]

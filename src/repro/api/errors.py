@@ -1,0 +1,40 @@
+"""Typed plan-validation errors (H2-style whole-plan checks, pre-launch).
+
+Every failure mode that used to surface as a shape error deep inside jit
+(or worse, as a silently-replicated tensor) gets a named exception here so
+callers can catch the *category*, and the message carries the fix.
+
+Hierarchy::
+
+    PlanError (ValueError)
+      +-- UnknownAxisError        plan names a mesh axis that cannot bind
+      +-- IndivisibleError        a dim would silently replicate (strict mode)
+      +-- HostMemoryError         host offload on a backend without a host tier
+      +-- ServePlanError          plan is invalid for the serving runtime
+      +-- TopologyError           session topology cannot be realised
+"""
+from __future__ import annotations
+
+
+class PlanError(ValueError):
+    """A HyperPlan cannot be resolved against the session topology."""
+
+
+class UnknownAxisError(PlanError):
+    """The plan references mesh axes that exist on no axis of the topology."""
+
+
+class IndivisibleError(PlanError):
+    """A sharded dim does not divide its mesh axes (strict validation)."""
+
+
+class HostMemoryError(PlanError):
+    """Host offload requested but the backend exposes no host memory kind."""
+
+
+class ServePlanError(PlanError):
+    """The plan cannot drive the serving runtime (e.g. fsdp-sharded weights)."""
+
+
+class TopologyError(PlanError):
+    """The requested device matrix cannot be built from available devices."""

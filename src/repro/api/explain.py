@@ -1,0 +1,160 @@
+"""Plan resolution reports: every leaf, its spec, its memory tier, its rule.
+
+``explain(plan, cfg, layout)`` runs the full HyperShard derivation for a
+model config against a device matrix — parameters, optimizer state and
+decode caches — without touching a single device (shapes come from
+``jax.eval_shape``).  The result is a :class:`PlanReport` whose rows each
+carry the derived ``PartitionSpec``, the memory kind the leaf will live
+in, and *which rule fired* (regex from the HyperShard rule table, or the
+cache-derivation branch), plus notes for every divisibility fallback.
+
+This is the paper's "formal derivation" made inspectable: the same report
+that a human reads is what ``validate(strict=True)`` checks, so "a dim
+silently replicated" is a reviewable line item (or a typed
+:class:`~repro.api.errors.IndivisibleError`), never a surprise inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.api.errors import IndivisibleError
+from repro.api.plan import HyperPlan
+from repro.core import hypershard
+from repro.core.layout import Layout
+
+# device matrix used when a session has no mesh (single device): axis sizes
+# are all 1 so nothing actually shards, but the report still shows where
+# every leaf WOULD bind on a real matrix.
+SINGLE_DEVICE_LAYOUT = Layout((1, 1), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafReport:
+    kind: str                  # "param" | "opt" | "cache"
+    path: str
+    shape: Tuple[int, ...]
+    spec: object               # jax.sharding.PartitionSpec
+    memory: str                # "device" | "host"
+    rule: str                  # rule regex / cache branch that fired
+    notes: Tuple[str, ...]     # divisibility fallbacks etc.
+
+    @property
+    def fell_back(self) -> bool:
+        return bool(self.notes)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    plan: HyperPlan
+    model: str
+    layout: Layout
+    leaves: Tuple[LeafReport, ...]
+
+    def select(self, kind: str) -> Tuple[LeafReport, ...]:
+        return tuple(l for l in self.leaves if l.kind == kind)
+
+    @property
+    def params(self):
+        return self.select("param")
+
+    @property
+    def caches(self):
+        return self.select("cache")
+
+    @property
+    def opt(self):
+        return self.select("opt")
+
+    @property
+    def fallbacks(self) -> Tuple[LeafReport, ...]:
+        return tuple(l for l in self.leaves if l.fell_back)
+
+    def coverage(self) -> dict:
+        return {"param": len(self.params), "opt": len(self.opt),
+                "cache": len(self.caches), "fallbacks": len(self.fallbacks)}
+
+    def raise_on_fallback(self) -> "PlanReport":
+        """strict mode: any silently-replicated dim is an IndivisibleError."""
+        if self.fallbacks:
+            lines = [f"  {l.kind:5s} {l.path}: {'; '.join(l.notes)}"
+                     for l in self.fallbacks]
+            raise IndivisibleError(
+                f"{len(self.fallbacks)} leaves of {self.model} do not divide "
+                f"the {self.layout.device_matrix} matrix and would silently "
+                "replicate:\n" + "\n".join(lines))
+        return self
+
+    def __str__(self) -> str:
+        hdr = (f"HyperPlan resolution: model={self.model} plan="
+               f"{self.plan.name or '<unnamed>'} matrix="
+               f"{self.layout.device_matrix}/{self.layout.alias_name}")
+        rows = [hdr, f"{'kind':6s} {'path':42s} {'shape':20s} "
+                     f"{'spec':34s} {'mem':7s} rule"]
+        for l in self.leaves:
+            rows.append(f"{l.kind:6s} {l.path:42s} {str(l.shape):20s} "
+                        f"{str(l.spec):34s} {l.memory:7s} {l.rule}")
+            for n in l.notes:
+                rows.append(f"       ! {n}")
+        c = self.coverage()
+        rows.append(f"{c['param']} params, {c['opt']} opt leaves, "
+                    f"{c['cache']} cache leaves, "
+                    f"{c['fallbacks']} divisibility fallbacks")
+        return "\n".join(rows)
+
+
+def _spec_offloadable(spec, layout: Layout) -> bool:
+    """XLA SPMD only host-places fully-sharded leaves; the report must show
+    the same selectivity the runtime applies (shared predicate)."""
+    from repro.core.offload import spec_fully_sharded
+    return spec_fully_sharded(
+        spec, {a: layout.axis_size(a) for a in layout.alias_name})
+
+
+def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
+            batch: int = 1, cache_len: Optional[int] = None,
+            with_opt: bool = True, with_cache: bool = True) -> PlanReport:
+    """Resolve ``plan`` for ``cfg`` on ``layout``; return the full report."""
+    import jax
+
+    from repro.models import model as M
+
+    layout = layout or SINGLE_DEVICE_LAYOUT
+    plan = HyperPlan.coerce(plan)
+    plan.validate(layout)
+    splan = plan.sharding_plan()
+    leaves = []
+
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    paths, pleaves, _ = hypershard.tree_paths(pshapes)
+    for path, leaf in zip(paths, pleaves):
+        strat, rule, notes = hypershard.derive_param(path, tuple(leaf.shape),
+                                                     layout, splan)
+        spec = strat.partition_spec()
+        host = plan.params_on_host and _spec_offloadable(spec, layout)
+        leaves.append(LeafReport("param", path, tuple(leaf.shape), spec,
+                                 "host" if host else "device",
+                                 rule or "<default: replicate>", notes))
+        if with_opt:
+            # AdamW mu/nu mirror the param layout (see optim/adamw.py)
+            ohost = plan.opt_state_on_host and _spec_offloadable(spec, layout)
+            for moment in ("mu", "nu"):
+                leaves.append(LeafReport(
+                    "opt", f"{moment}/{path}", tuple(leaf.shape), spec,
+                    "host" if ohost else "device",
+                    rule or "<default: replicate>", notes))
+
+    if with_cache:
+        clen = cache_len or max(cfg.sliding_window, 64)
+        cshapes = jax.eval_shape(
+            lambda: M.init_caches(cfg, batch, clen))
+        cpaths, cleaves, _ = hypershard.tree_paths(cshapes)
+        for path, leaf in zip(cpaths, cleaves):
+            strat, note, fbs = hypershard.derive_cache(
+                path, tuple(leaf.shape), layout, splan, batch=batch)
+            leaves.append(LeafReport("cache", path, tuple(leaf.shape),
+                                     strat.partition_spec(), "device",
+                                     note, fbs))
+
+    return PlanReport(plan, getattr(cfg, "name", str(cfg)), layout,
+                      tuple(leaves))

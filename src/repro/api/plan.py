@@ -1,0 +1,243 @@
+"""HyperPlan: one frozen, declarative description of a supernode strategy.
+
+The paper treats the supernode as a single logical computer whose parallel
+strategy is *declared*, not implemented (HyperShard §3.4).  Before this
+layer the declaration was scattered over four objects — ``ShardingPlan``,
+``OffloadConfig``, ``ServeConfig`` and ad-hoc mpmd role splits — with
+duplicated fields and per-launcher re-wiring.  ``HyperPlan`` absorbs all
+of them:
+
+  - sharding intent  (tp / fsdp / dp axes, MoE weight placement)
+  - memory-tier intent (HyperOffload §3.2: params / optimizer state /
+    activations on host, per-layer streaming)
+  - serving intent   (an embedded :class:`~repro.configs.base.ServeConfig`)
+  - MPMD role intent (paper Listing 1: ``roles`` name->device-count pairs,
+    e.g. prefill/decode disaggregation)
+
+and resolves once — ``sharding_plan()`` / ``offload_config()`` /
+``serve_config()`` are pure lowerings consumed by the existing engines.
+Memory-tier placement lowers *exclusively* into the ``OffloadConfig`` leg
+(the ``ShardingPlan`` it emits always carries ``params_on_host=False``):
+jit steps stay pure-device and the host<->HBM legs run between steps,
+which is the one-source-of-truth fix for the old double-spec footgun.
+
+``validate()`` is the H2-style eager whole-plan check: unknown mesh axes,
+host offload without a host memory tier, inconsistent streaming knobs and
+malformed roles raise typed :class:`~repro.api.errors.PlanError` subclasses
+*before* any compilation, instead of failing deep inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+from repro.api.errors import (HostMemoryError, PlanError, UnknownAxisError)
+from repro.configs.base import ServeConfig
+from repro.core.hypershard import ShardingPlan
+from repro.core.layout import Layout
+from repro.core.offload import OffloadConfig
+
+Axes = Optional[Tuple[str, ...]]
+
+# Axis names a plan may reference beyond the live mesh: a plan written for
+# the multi-pod production matrix degrades gracefully on smaller meshes by
+# dropping these (e.g. "pod" on a single-pod run) — anything else is a typo.
+WELL_KNOWN_AXES = frozenset({"pod", "data", "model"})
+
+
+def _axes_tuple(v) -> Axes:
+    if v is None:
+        return None
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperPlan:
+    """The single declarative front door (frozen => hashable, jit-static)."""
+    # -- sharding intent (HyperShard §3.4) ---------------------------------
+    tp: Axes = ("model",)                  # tensor-parallel mesh axes
+    fsdp: Axes = ("pod", "data")           # ZeRO-3-ish parameter sharding axes
+    dp: Axes = ("pod", "data")             # batch axes
+    moe_weights: str = "ep"                # "ep" | "dp" expert placement
+    kv_seq_axes: Axes = None               # shard cache sequence (flash-decode)
+    # -- memory-tier intent (HyperOffload §3.2) ----------------------------
+    params_on_host: bool = False           # weights live in host memory
+    opt_state_on_host: bool = False        # optimizer moments live on host
+    activation_offload: bool = False       # remat-offload layer residuals
+    stream_layers: bool = False            # per-layer fetch pipeline (unrolled)
+    prefetch_depth: int = 2                # layers resident in HBM at once
+    # -- serving intent ----------------------------------------------------
+    serve: Optional[ServeConfig] = None    # paged pool + scheduler knobs
+    # -- MPMD role intent (paper Listing 1) --------------------------------
+    # ((name, device_count), ...); count 0 = auto-balance the remainder
+    roles: Tuple[Tuple[str, int], ...] = ()
+    name: str = ""                         # preset name, shown in reports
+
+    def __post_init__(self):
+        object.__setattr__(self, "tp", _axes_tuple(self.tp))
+        object.__setattr__(self, "fsdp", _axes_tuple(self.fsdp))
+        object.__setattr__(self, "dp", _axes_tuple(self.dp))
+        object.__setattr__(self, "kv_seq_axes", _axes_tuple(self.kv_seq_axes))
+        roles = self.roles
+        if isinstance(roles, dict):
+            roles = tuple(roles.items())
+        object.__setattr__(self, "roles", tuple((str(n), int(c))
+                                                for n, c in roles))
+
+    def replace(self, **kw) -> "HyperPlan":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    # coercion from the legacy objects (deprecation-shim entry points)
+    # ------------------------------------------------------------------
+    @classmethod
+    def coerce(cls, plan: Union[None, "HyperPlan", ShardingPlan],
+               *, for_serving: bool = False) -> "HyperPlan":
+        """Lift a legacy ``ShardingPlan`` (or None) into a HyperPlan."""
+        if plan is None:
+            return cls(fsdp=None, name="serve-default") if for_serving else cls()
+        if isinstance(plan, cls):
+            return plan
+        if isinstance(plan, ShardingPlan):
+            return cls(tp=plan.tp, fsdp=plan.fsdp, dp=plan.dp,
+                       moe_weights=plan.moe_weights,
+                       kv_seq_axes=plan.kv_seq_axes,
+                       params_on_host=plan.params_on_host,
+                       opt_state_on_host=plan.opt_state_on_host,
+                       activation_offload=plan.activation_offload,
+                       name="legacy-sharding-plan")
+        raise PlanError(f"cannot coerce {type(plan).__name__} into a HyperPlan")
+
+    def absorb_offload(self, ocfg: OffloadConfig) -> "HyperPlan":
+        """Fold a legacy ``OffloadConfig`` in (OR semantics on the booleans).
+
+        Raises :class:`PlanError` when both sides pin ``prefetch_depth`` to
+        different values — the one genuinely ambiguous double-spec.
+        """
+        depth = self.prefetch_depth
+        default_depth = OffloadConfig.prefetch_depth
+        if ocfg.prefetch_depth != default_depth:
+            if depth != default_depth and depth != ocfg.prefetch_depth:
+                raise PlanError(
+                    f"conflicting prefetch_depth: plan={depth} vs legacy "
+                    f"OffloadConfig={ocfg.prefetch_depth}; set it in ONE place "
+                    "(the HyperPlan)")
+            depth = ocfg.prefetch_depth
+        return self.replace(
+            params_on_host=self.params_on_host or ocfg.params_on_host,
+            opt_state_on_host=self.opt_state_on_host or ocfg.opt_state_on_host,
+            activation_offload=(self.activation_offload
+                                or ocfg.activations_to_host),
+            stream_layers=self.stream_layers or ocfg.stream_layers,
+            prefetch_depth=depth)
+
+    # ------------------------------------------------------------------
+    # lowerings (the single resolution step)
+    # ------------------------------------------------------------------
+    def sharding_plan(self) -> ShardingPlan:
+        """Lower to the HyperShard engine's declaration.
+
+        Memory-tier flags are deliberately NOT propagated: jit steps are
+        pure-device (see module docstring); host placement is owned by
+        :meth:`offload_config`.
+        """
+        return ShardingPlan(tp=self.tp, fsdp=self.fsdp, dp=self.dp,
+                            moe_weights=self.moe_weights,
+                            kv_seq_axes=self.kv_seq_axes,
+                            params_on_host=False, opt_state_on_host=False,
+                            activation_offload=self.activation_offload)
+
+    def offload_config(self) -> OffloadConfig:
+        return OffloadConfig(params_on_host=self.params_on_host,
+                             opt_state_on_host=self.opt_state_on_host,
+                             activations_to_host=self.activation_offload,
+                             stream_layers=self.stream_layers,
+                             prefetch_depth=self.prefetch_depth)
+
+    def serve_config(self) -> ServeConfig:
+        return self.serve if self.serve is not None else ServeConfig()
+
+    def roles_dict(self) -> Dict[str, int]:
+        return dict(self.roles)
+
+    @property
+    def wants_offload(self) -> bool:
+        return (self.params_on_host or self.opt_state_on_host
+                or self.activation_offload)
+
+    # ------------------------------------------------------------------
+    # eager validation
+    # ------------------------------------------------------------------
+    def _axis_groups(self):
+        return (("tp", self.tp), ("fsdp", self.fsdp), ("dp", self.dp),
+                ("kv_seq_axes", self.kv_seq_axes))
+
+    def validate(self, layout: Optional[Layout] = None) -> "HyperPlan":
+        """Whole-plan consistency check; returns self so it chains.
+
+        ``layout`` (when given) is the device matrix the plan must bind to.
+        Axis-binding rules: an axis absent from the layout is tolerated only
+        if it is a well-known larger-topology axis (``pod`` on a single-pod
+        mesh) AND at least one axis of the group still binds — a group that
+        binds nothing, or an axis outside the known vocabulary, is an
+        :class:`UnknownAxisError` (a typo would otherwise silently
+        replicate everything it was meant to shard).
+        """
+        if self.moe_weights not in ("ep", "dp"):
+            raise PlanError(f"moe_weights must be 'ep' or 'dp', "
+                            f"got {self.moe_weights!r}")
+        if self.prefetch_depth < 1:
+            raise PlanError(f"prefetch_depth must be >= 1, "
+                            f"got {self.prefetch_depth}")
+        if self.stream_layers and not self.params_on_host:
+            raise PlanError("stream_layers=True without params_on_host=True: "
+                            "per-layer streaming fetches host-resident "
+                            "weights; enable params_on_host or drop "
+                            "stream_layers")
+        seen = set()
+        for rname, count in self.roles:
+            if rname in seen:
+                raise PlanError(f"duplicate role {rname!r} in plan roles")
+            seen.add(rname)
+            if count < 0:
+                raise PlanError(f"role {rname!r} has negative device count "
+                                f"{count} (use 0 for auto-balance)")
+        vocab = WELL_KNOWN_AXES | (set(layout.alias_name) if layout else set())
+        for gname, axes in self._axis_groups():
+            if not axes:
+                continue
+            unknown = [a for a in axes if a not in vocab]
+            if unknown:
+                raise UnknownAxisError(
+                    f"plan.{gname}={axes} references unknown mesh ax"
+                    f"{'es' if len(unknown) > 1 else 'is'} {unknown}; known "
+                    f"axes: {sorted(vocab)}")
+            if layout is not None:
+                bound = [a for a in axes if a in layout.alias_name]
+                if not bound:
+                    raise UnknownAxisError(
+                        f"plan.{gname}={axes} binds to NO axis of the "
+                        f"topology {layout.alias_name}; the intent would "
+                        "silently replicate — fix the plan or the topology")
+        if self.wants_offload:
+            _require_host_memory(self)
+        return self
+
+
+def _require_host_memory(plan: HyperPlan) -> None:
+    """Raise HostMemoryError unless the backend has a host memory tier."""
+    import jax
+    try:
+        kinds = {m.kind for m in jax.devices()[0].addressable_memories()}
+    except Exception:  # noqa: BLE001 - very old jax: no memories API
+        raise HostMemoryError(
+            "plan requests host offload (params_on_host/opt_state_on_host/"
+            "activation_offload) but this JAX backend exposes no memory-kind "
+            "API; drop the offload intent or upgrade JAX")
+    if not any(k.endswith("host") for k in kinds):
+        raise HostMemoryError(
+            "plan requests host offload but the backend has no host memory "
+            f"kind (available: {sorted(kinds)}); drop params_on_host/"
+            "opt_state_on_host/activation_offload for this platform")

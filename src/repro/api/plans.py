@@ -1,0 +1,77 @@
+"""Named HyperPlan presets — the strategy algebra's standard library.
+
+Each preset is a function returning a fully-formed :class:`HyperPlan`;
+keyword overrides pass straight through ``HyperPlan.replace``, so
+``plans.fsdp_tp(params_on_host=True)`` composes a preset with extra
+intent (HyperParallel-Mpipe's "small algebra + one resolution step").
+
+Presets register by name for CLI / config-file lookup::
+
+    plans.get("serve_disagg")()         # same as plans.serve_disagg()
+    plans.names()                       # all registered presets
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.api.plan import HyperPlan
+from repro.configs.base import ServeConfig
+
+_REGISTRY: Dict[str, Callable[..., HyperPlan]] = {}
+
+
+def register(fn: Callable[..., HyperPlan]) -> Callable[..., HyperPlan]:
+    _REGISTRY[fn.__name__] = fn
+    return fn
+
+
+def get(name: str) -> Callable[..., HyperPlan]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown plan preset {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names():
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+@register
+def fsdp_tp(**over) -> HyperPlan:
+    """Training default: tensor parallel over `model`, ZeRO-3 over pod+data."""
+    return HyperPlan(name="fsdp_tp").replace(**over)
+
+
+@register
+def tp_only(**over) -> HyperPlan:
+    """TP-sharded weights, replicated over the batch axes (small models)."""
+    return HyperPlan(fsdp=None, name="tp_only").replace(**over)
+
+
+@register
+def serve(**over) -> HyperPlan:
+    """Inference default: TP weights, dp on batch, no fsdp (see ServePlanError
+    in serve/runtime.py for why fsdp and decode do not mix)."""
+    return HyperPlan(fsdp=None, serve=ServeConfig(),
+                     name="serve").replace(**over)
+
+
+@register
+def serve_disagg(n_prefill: int = 0, n_decode: int = 0, **over) -> HyperPlan:
+    """Prefill/decode role disaggregation (HyperMPMD §3.3).
+
+    Device counts of 0 auto-balance over the session's devices at
+    resolution time (prefill gets floor(n/2), decode the rest).  Serving
+    knobs ride on the ``serve=`` field, same as every preset.
+    """
+    return HyperPlan(fsdp=None, serve=ServeConfig(),
+                     roles=(("prefill", n_prefill), ("decode", n_decode)),
+                     name="serve_disagg").replace(**over)
+
+
+@register
+def offload_all(**over) -> HyperPlan:
+    """HyperOffload maximal: params + optimizer state + activations on host."""
+    return HyperPlan(params_on_host=True, opt_state_on_host=True,
+                     activation_offload=True,
+                     name="offload_all").replace(**over)

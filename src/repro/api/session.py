@@ -1,0 +1,236 @@
+"""Supernode: the session facade — "one logical computer" (paper §2.3).
+
+A :class:`Supernode` owns the device matrix (mesh construction, role
+carving) and exposes the whole framework behind four verbs::
+
+    session = Supernode.auto()                  # or Supernode((2, 16, 16))
+    params, hist = session.train(cfg, shape, plan=plans.fsdp_tp())
+    serve = session.serve(cfg, params, plan=plans.serve_disagg())
+    out   = session.generate(cfg, params, prompts, max_new_tokens=16)
+    print(session.explain(plans.offload_all(), cfg))
+
+Every entry point resolves the declarative :class:`HyperPlan` exactly once
+(validated eagerly, typed ``PlanError`` on failure) and hands the lowered
+``ShardingPlan`` / ``OffloadConfig`` / ``ServeConfig`` / process groups to
+the engines.  Launchers and examples construct no mesh and no config
+object pair by hand — this is the front door every workload shares.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.api.errors import PlanError, TopologyError
+from repro.api.explain import SINGLE_DEVICE_LAYOUT, PlanReport, explain
+from repro.api.plan import HyperPlan
+from repro.core.layout import Layout, layout_for_mesh
+
+_DEFAULT_AXES = {1: ("model",), 2: ("data", "model"),
+                 3: ("pod", "data", "model")}
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """Everything a HyperPlan lowers to, resolved once per entry point."""
+    plan: HyperPlan
+    sharding: object            # core.hypershard.ShardingPlan
+    offload: object             # core.offload.OffloadConfig
+    serve: object               # configs.base.ServeConfig
+    groups: Dict[str, object]   # role name -> mpmd.ProcessGroup
+
+
+class Supernode:
+    """Session over one device matrix; all mesh construction lives here.
+
+    ``topology`` may be:
+      - ``None``           single device, no mesh (the CPU smoke-test path)
+      - a shape tuple      ``(2, 16, 16)`` -> axes ("pod", "data", "model")
+      - a dict             ``{"data": 2, "model": 4}``
+      - a ``SupernodeSpec`` (core.topology) for the production matrices
+      - an existing mesh via ``Supernode(mesh=...)``
+    """
+
+    def __init__(self, topology=None, *, axis_names: Optional[Tuple[str, ...]] = None,
+                 devices: Optional[Sequence] = None, mesh=None):
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.core.topology import SupernodeSpec
+
+        if mesh is not None:
+            self.mesh = mesh
+            self.layout: Optional[Layout] = layout_for_mesh(mesh)
+            self.devices = list(mesh.devices.flat)
+            return
+        self.devices = list(devices) if devices is not None else jax.devices()
+        if topology is None:
+            self.mesh = None
+            self.layout = None
+            return
+        if isinstance(topology, SupernodeSpec):
+            shape, names = topology.mesh_shape, topology.axis_names
+        elif isinstance(topology, dict):
+            names, shape = tuple(topology), tuple(topology.values())
+        else:
+            shape = tuple(int(n) for n in topology)
+            names = tuple(axis_names) if axis_names else _DEFAULT_AXES.get(
+                len(shape))
+            if names is None:
+                raise TopologyError(
+                    f"no default axis names for rank-{len(shape)} topology "
+                    f"{shape}; pass axis_names=")
+        if len(names) != len(shape):
+            raise TopologyError(f"topology {shape} and axis_names {names} "
+                                "must have equal rank")
+        need = math.prod(shape)
+        if need > len(self.devices):
+            raise TopologyError(
+                f"topology {shape} needs {need} devices, have "
+                f"{len(self.devices)} (set XLA_FLAGS=--xla_force_host_"
+                "platform_device_count=N to emulate on CPU)")
+        self.layout = Layout(shape, names)
+        self.devices = self.devices[:need]
+        self.mesh = Mesh(np.array(self.devices).reshape(shape), names)
+
+    @classmethod
+    def auto(cls) -> "Supernode":
+        """All local devices: single-device fast path, else one model axis."""
+        import jax
+        n = len(jax.devices())
+        return cls(None) if n == 1 else cls((1, n))
+
+    # ------------------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def __repr__(self) -> str:
+        if self.layout is None:
+            return f"Supernode(single-device, {self.num_devices} available)"
+        return (f"Supernode({self.layout.device_matrix} / "
+                f"{self.layout.alias_name})")
+
+    # ------------------------------------------------------------------
+    # plan resolution (the one place intent becomes placements)
+    # ------------------------------------------------------------------
+    def resolve(self, plan: Union[None, HyperPlan, object] = None, *,
+                for_serving: bool = False) -> Resolution:
+        hp = HyperPlan.coerce(plan, for_serving=for_serving)
+        hp.validate(self.layout)
+        return Resolution(plan=hp, sharding=hp.sharding_plan(),
+                          offload=hp.offload_config(),
+                          serve=hp.serve_config(),
+                          groups=self._role_groups(hp))
+
+    def _role_groups(self, hp: HyperPlan) -> Dict[str, object]:
+        roles = hp.roles_dict()
+        if not roles:
+            return {}
+        from repro.core import mpmd
+        fixed = sum(c for c in roles.values() if c > 0)
+        n_auto = sum(1 for c in roles.values() if c == 0)
+        spare = len(self.devices) - fixed
+        if spare < n_auto:
+            raise TopologyError(
+                f"plan roles {roles} need more devices than the session has "
+                f"({len(self.devices)}); shrink the roles or grow the "
+                "topology")
+        mapping: Dict[str, int] = {}
+        auto_i = 0
+        for name, count in roles.items():
+            if count == 0:
+                # auto-balance the remainder over the auto roles
+                count = spare // n_auto + (1 if auto_i < spare % n_auto else 0)
+                auto_i += 1
+            mapping[name] = count
+        if any(c < 1 for c in mapping.values()):
+            raise TopologyError(
+                f"plan roles {roles} resolve to an empty group on "
+                f"{len(self.devices)} devices: {mapping}")
+        return mpmd.groups_from_mapping(mapping, devices=self.devices)
+
+    def groups(self, mapping: Dict[str, int], *,
+               devices: Optional[Sequence] = None, **kw) -> Dict[str, object]:
+        """Carve named process groups from the session's devices
+        (paper Listing 1 node-to-module mapping)."""
+        from repro.core import mpmd
+        return mpmd.groups_from_mapping(
+            mapping, devices=self.devices if devices is None else devices,
+            **kw)
+
+    def scheduler(self, groups: Dict[str, object]):
+        """Single-controller MPMD scheduler over the given groups."""
+        from repro.core import mpmd
+        return mpmd.MPMDScheduler(groups)
+
+    # ------------------------------------------------------------------
+    # verbs
+    # ------------------------------------------------------------------
+    def train(self, cfg, shape, *, plan: Union[None, HyperPlan, object] = None,
+              adamw=None, train_cfg=None, steps: Optional[int] = None,
+              moe_dispatch: str = "gshard", hook=None):
+        """End-to-end training under the resolved plan; (params, history)."""
+        from repro.train import trainer
+        hp = HyperPlan.coerce(plan)
+        if hp.roles:
+            raise PlanError(
+                f"plan declares mpmd roles {hp.roles_dict()} but "
+                "session.train runs one SPMD program; roles drive serve() "
+                "(prefill/decode) — drop them or use groups()/scheduler() "
+                "for custom MPMD training")
+        # trainer.train performs the (single) validation + lowering step
+        if train_cfg is None:
+            train_cfg = trainer.TrainConfig(num_steps=steps or 100)
+        elif steps is not None:
+            train_cfg = dataclasses.replace(train_cfg, num_steps=steps)
+        return trainer.train(cfg, shape, mesh=self.mesh, plan=hp,
+                             adamw=adamw, train_cfg=train_cfg,
+                             moe_dispatch=moe_dispatch, hook=hook)
+
+    def serve(self, cfg, params, *, plan: Union[None, HyperPlan, object] = None,
+              seed: int = 0, moe_dispatch: str = "gshard"):
+        """Continuous-batching HyperServe runtime under the resolved plan."""
+        from repro.serve.api import HyperServe
+        res = self.resolve(plan, for_serving=True)
+        groups = res.groups
+        if groups and set(groups) != {"prefill", "decode"}:
+            raise PlanError(
+                f"serving roles must be exactly {{'prefill', 'decode'}}, "
+                f"plan declares {sorted(groups)}")
+        return HyperServe(cfg, params, serve_cfg=res.serve, mesh=self.mesh,
+                          plan=res.plan,
+                          prefill_group=groups.get("prefill"),
+                          decode_group=groups.get("decode"),
+                          seed=seed, moe_dispatch=moe_dispatch)
+
+    def generate(self, cfg, params, prompts, *, max_new_tokens: int = 16,
+                 temperature: float = 0.0, max_len: Optional[int] = None,
+                 window_override: Optional[int] = None,
+                 plan: Union[None, HyperPlan, object] = None, seed: int = 0):
+        """Fixed-batch generation (prefill + sequential decode)."""
+        import jax.numpy as jnp
+
+        from repro.serve.engine import GenerateConfig, Generator
+        res = self.resolve(plan, for_serving=True)
+        prompts = jnp.asarray(prompts, jnp.int32)
+        if prompts.ndim == 1:
+            prompts = prompts[None, :]
+        gen = Generator(cfg, params, mesh=self.mesh, plan=res.sharding,
+                        max_len=max_len or prompts.shape[1] + max_new_tokens + 8,
+                        window_override=window_override)
+        return gen.generate(prompts, GenerateConfig(
+            max_new_tokens=max_new_tokens, temperature=temperature, seed=seed))
+
+    def explain(self, plan: Union[None, HyperPlan, object], cfg, *,
+                batch: int = 1, cache_len: Optional[int] = None,
+                strict: bool = False, for_serving: bool = False) -> PlanReport:
+        """Resolution report: every param/opt/cache leaf with spec, memory
+        kind and the rule that fired.  ``strict=True`` raises
+        :class:`IndivisibleError` on any silent-replication fallback."""
+        hp = HyperPlan.coerce(plan, for_serving=for_serving)
+        report = explain(hp, cfg, self.layout or SINGLE_DEVICE_LAYOUT,
+                         batch=batch, cache_len=cache_len)
+        return report.raise_on_fallback() if strict else report

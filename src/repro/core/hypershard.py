@@ -10,6 +10,11 @@ formal derivation rejects invalid strategies).
 
 The same registry derives optimizer-state and KV-cache shardings, so one
 declaration covers train + serve.
+
+This module is the derivation *engine*; the user-facing declaration is
+:class:`repro.api.HyperPlan`, which lowers to a :class:`ShardingPlan`
+(plus an ``OffloadConfig`` / ``ServeConfig``) in one resolution step and
+validates eagerly before anything is jitted.
 """
 from __future__ import annotations
 
@@ -99,40 +104,70 @@ def _role_axes(role: str, plan: ShardingPlan) -> Axes:
     return None
 
 
-def roles_for_path(path: str, shape: Tuple[int, ...],
-                   moe_weights: str = "ep") -> Tuple[str, ...]:
-    """Match the rule table; returns one role per *trailing* dim."""
+def match_rule(path: str, shape: Tuple[int, ...],
+               moe_weights: str = "ep"):
+    """The rule table lookup: returns ``(pattern, roles)``.
+
+    ``pattern`` is the regex that fired (``None`` for the replicate-all
+    default) — surfaced by ``repro.api`` explain reports so every derived
+    spec is traceable to its rule.
+    """
     moe_rules = _MOE_RULES_DP if moe_weights == "dp" else _MOE_RULES
     for pat, roles in moe_rules:
         if re.search(pat, path) and len(shape) >= 3:
-            return roles
+            return pat, roles
     for pat, roles in _RULES:
         if re.search(pat, path):
-            return roles
-    return ("none",) * len(shape)
+            return pat, roles
+    return None, ("none",) * len(shape)
 
 
-def param_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
-                   plan: ShardingPlan) -> ShardStrategy:
-    roles = roles_for_path(path, shape, plan.moe_weights)
+def roles_for_path(path: str, shape: Tuple[int, ...],
+                   moe_weights: str = "ep") -> Tuple[str, ...]:
+    """Match the rule table; returns one role per *trailing* dim."""
+    return match_rule(path, shape, moe_weights)[1]
+
+
+def derive_param(path: str, shape: Tuple[int, ...], layout: Layout,
+                 plan: ShardingPlan):
+    """Full param derivation: ``(ShardStrategy, rule_pattern, notes)``.
+
+    ``notes`` records every divisibility fallback (axes dropped because the
+    dim does not divide) — the raw material for ``repro.api``
+    explain/validate.  Plan axes absent from the layout are NOT noted:
+    that is the sanctioned multi-pod -> single-pod degradation, policed
+    eagerly by ``HyperPlan.validate`` instead.
+    """
+    rule, roles = match_rule(path, shape, plan.moe_weights)
     # leading dims not covered by the role tuple (stacked layers) replicate
     lead = len(shape) - len(roles)
     if lead < 0:                            # param rank < rule rank (reduced cfg)
         roles = roles[-len(shape):]
         lead = 0
     entries: list = [None] * lead
-    avail = {a: layout.axis_size(a) for a in layout.alias_name}
-    for dim, role in zip(shape[lead:], roles):
+    notes: list = []
+    for i, (dim, role) in enumerate(zip(shape[lead:], roles), start=lead):
         axes = _role_axes(role, plan)
         if not axes:
             entries.append(None)
             continue
         kept = tuple(a for a in axes if a in layout.alias_name)
+        requested = kept
         # divisibility fallback: drop axes (innermost first) until it divides
         while kept and dim % math.prod(layout.axis_size(a) for a in kept):
             kept = kept[1:]
+        if kept != requested:
+            dropped = requested[:len(requested) - len(kept)]
+            n = math.prod(layout.axis_size(a) for a in requested)
+            notes.append(f"dim{i}[{role}]: {dim} % {n} != 0, dropped "
+                         f"{dropped} -> " + (f"{kept}" if kept else "replicated"))
         entries.append(kept if len(kept) > 1 else (kept[0] if kept else None))
-    return layout(*entries)
+    return layout(*entries), rule, tuple(notes)
+
+
+def param_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
+                   plan: ShardingPlan) -> ShardStrategy:
+    return derive_param(path, shape, layout, plan)[0]
 
 
 def tree_paths(tree):
@@ -173,9 +208,11 @@ def _fit(entry: Tuple[str, ...]):
     return entry if len(entry) > 1 else (entry[0] if entry else None)
 
 
-def cache_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
-                   plan: ShardingPlan, *, batch: int) -> ShardStrategy:
-    """Decode-state tensors (dim0 is always the stacked-layer axis):
+def derive_cache(path: str, shape: Tuple[int, ...], layout: Layout,
+                 plan: ShardingPlan, *, batch: int):
+    """Decode-state derivation: ``(ShardStrategy, branch_note, fallbacks)``.
+
+    Decode-state tensors (dim0 is always the stacked-layer axis):
 
       k/v           (L, B, S, KV, hd)   attention KV cache
       ckv / krope   (L, B, S, R)        MLA compressed latent cache
@@ -185,41 +222,86 @@ def cache_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
     Batch shards over dp when divisible; otherwise (long_500k, B=1) the
     sequence dim absorbs the dp axes — context-parallel flash-decode.  KV
     heads shard over tp when divisible, else the sequence dim absorbs tp.
+
+    ``branch_note`` names the branches that fired; ``fallbacks`` records
+    every plan axis group that ended up placed NOWHERE (silent
+    replication) — the strict-validation signal for explain reports.
     """
     dp = tuple(a for a in (plan.dp or ()) if a in layout.alias_name)
     tp = tuple(a for a in (plan.tp or ()) if a in layout.alias_name)
     ndim = len(shape)
     entries: list = [None] * ndim
+    notes: list = []
+    fallbacks: list = []
 
     def size(axes):
         return math.prod(layout.axis_size(a) for a in axes) if axes else 1
+
+    def seq_absorb(seq_axes, absorbing: str):
+        """Place the absorbed axes on the seq dim; record silent failure."""
+        if not seq_axes:
+            return
+        if shape[2] % size(seq_axes) == 0:
+            entries[2] = _fit(seq_axes)
+            notes.append(f"seq/{'+'.join(seq_axes)}")
+        else:
+            fallbacks.append(
+                f"seq cannot absorb {absorbing} ({shape[2]} % "
+                f"{size(seq_axes)} != 0) -> {seq_axes} unplaced, replicated")
 
     leaf = path.rsplit("/", 1)[-1]
     batch_ok = dp and shape[1] % size(dp) == 0
     if batch_ok:
         entries[1] = _fit(dp)
+        notes.append("batch/dp")
+    elif dp and leaf in ("k", "v", "ckv", "krope"):
+        notes.append("batch indivisible, dp falls to seq")
 
     if leaf in ("k", "v"):
         seq_axes: Tuple[str, ...] = () if batch_ok else dp
+        absorbing = "" if batch_ok else "dp"
         if tp and shape[3] % size(tp) == 0:
             entries[3] = _fit(tp)
+            notes.append("kv-heads/tp")
         else:
             seq_axes = seq_axes + tp
-        if seq_axes and shape[2] % size(seq_axes) == 0:
-            entries[2] = _fit(seq_axes)
+            if tp:
+                notes.append("kv-heads indivisible, tp falls to seq")
+                absorbing = (absorbing + "+tp") if absorbing else "tp"
+        seq_absorb(seq_axes, absorbing)
     elif leaf in ("ckv", "krope"):
         seq_axes = (() if batch_ok else dp) + tp
-        if seq_axes and shape[2] % size(seq_axes) == 0:
-            entries[2] = _fit(seq_axes)
+        seq_absorb(seq_axes, "tp" if batch_ok else "dp+tp")
     elif leaf == "state":
         # dim2 is heads (SSD) or channels (RG-LRU): shard over tp
-        if ndim >= 3 and tp and shape[2] % size(tp) == 0:
-            entries[2] = _fit(tp)
+        if ndim >= 3 and tp:
+            if shape[2] % size(tp) == 0:
+                entries[2] = _fit(tp)
+                notes.append("state-heads/tp")
+            else:
+                fallbacks.append(f"state heads {shape[2]} % {size(tp)} != 0 "
+                                 f"-> {tp} unplaced, replicated")
     elif leaf == "conv":
-        if ndim >= 4 and tp and shape[3] % size(tp) == 0:
-            entries[3] = _fit(tp)
+        if ndim >= 4 and tp:
+            if shape[3] % size(tp) == 0:
+                entries[3] = _fit(tp)
+                notes.append("conv-channels/tp")
+            else:
+                fallbacks.append(f"conv channels {shape[3]} % {size(tp)} != 0 "
+                                 f"-> {tp} unplaced, replicated")
+    if not batch_ok and dp and leaf in ("state", "conv"):
+        # constant-size decode state has no seq dim to absorb into
+        fallbacks.append(f"batch {shape[1]} % {size(dp)} != 0 -> {dp} "
+                         "unplaced, replicated")
 
-    return layout(*entries)
+    note = "cache[" + leaf + "]: " + (", ".join(notes) if notes
+                                      else "replicated")
+    return layout(*entries), note, tuple(fallbacks)
+
+
+def cache_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
+                   plan: ShardingPlan, *, batch: int) -> ShardStrategy:
+    return derive_cache(path, shape, layout, plan, batch=batch)[0]
 
 
 def make_cache_shardings(mesh: Mesh, cache_shape, plan: ShardingPlan, *,

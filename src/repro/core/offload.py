@@ -57,24 +57,30 @@ def with_memory_kind(shardings, kind: str):
         lambda s: NamedSharding(s.mesh, s.spec, memory_kind=kind), shardings)
 
 
-def _fully_sharded(s: NamedSharding) -> bool:
-    """True if the spec uses every mesh axis of size > 1.
+def spec_fully_sharded(spec, axis_sizes: dict) -> bool:
+    """True if the spec uses every axis of size > 1 (and rank >= 2).
 
     XLA SPMD rejects host-placement annotations on (partially) replicated
     tensors ("side-effect ops cannot be replicated"), so HyperOffload only
     hosts fully-sharded leaves — which are exactly the large ones worth
-    offloading; norms/biases stay in HBM.
+    offloading; norms/biases stay in HBM.  ``axis_sizes`` maps axis name
+    -> size; shared by the runtime predicate below and the
+    ``repro.api`` explain reports, so both always agree.
     """
-    if len(s.spec) < 2:
+    if len(spec) < 2:
         return False          # 1-D leaves: SPMD drops the annotation sharding
     used = set()
-    for e in s.spec:
+    for e in spec:
         if e is None:
             continue
         for a in (e,) if isinstance(e, str) else e:
             used.add(a)
-    need = {a for a in s.mesh.axis_names if s.mesh.shape[a] > 1}
+    need = {a for a, n in axis_sizes.items() if n > 1}
     return need <= used
+
+
+def _fully_sharded(s: NamedSharding) -> bool:
+    return spec_fully_sharded(s.spec, dict(s.mesh.shape))
 
 
 def host_shardings(shardings):

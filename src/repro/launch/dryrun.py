@@ -65,13 +65,15 @@ def true_repeat(cfg) -> int:
 
 
 def plan_for(cfg, shape, overrides: Optional[dict] = None) -> ShardingPlan:
-    """Default HyperShard plan per workload kind."""
-    if shape.kind == "train":
-        plan = ShardingPlan(tp=("model",), fsdp=("pod", "data"),
-                            dp=("pod", "data"))
-    else:
-        # inference: TP-only weights (replicated over dp), dp on batch
-        plan = ShardingPlan(tp=("model",), fsdp=None, dp=("pod", "data"))
+    """Default HyperPlan preset per workload kind, lowered for the engines.
+
+    train -> plans.fsdp_tp (ZeRO-3 + TP); inference -> plans.serve
+    (TP-only weights, replicated over dp, dp on batch).
+    """
+    from repro.api import plans as plan_presets
+    hp = (plan_presets.fsdp_tp() if shape.kind == "train"
+          else plan_presets.serve())
+    plan = hp.sharding_plan()
     if overrides:
         plan = plan.replace(**overrides)
     return plan
@@ -115,6 +117,8 @@ def _lower_one(cfg, shape, mesh, plan, *, moe_dispatch, offload_cfg,
 def _additive_metrics(compiled) -> dict:
     """Per-device additive metrics of one compiled executable."""
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older jax: one dict per device
+        ca = ca[0] if ca else {}
     coll = hlo_stats.collective_stats(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -1,6 +1,7 @@
-"""Serving launcher: fixed-batch generation or the HyperServe runtime.
+"""Serving launcher — fixed-batch generation or the HyperServe runtime,
+both through the Supernode session API.
 
-Fixed batch (the PR-0 path):
+Fixed batch:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --batch 4 --prompt-len 16 --max-new 32
@@ -8,7 +9,7 @@ Fixed batch (the PR-0 path):
 Continuous batching over the paged KV pool, with staggered arrivals:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --continuous --requests 8 --max-new 16 [--disaggregate]
+        --continuous --requests 8 --max-new 16 [--disaggregate] [--explain]
 """
 from __future__ import annotations
 
@@ -16,33 +17,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Supernode, plans
 from repro.configs.base import ServeConfig, get_config
 from repro.models import model as M
-from repro.serve.engine import GenerateConfig, Generator
 
 
-def run_fixed(cfg, params, args):
-    gen = Generator(cfg, params,
-                    max_len=args.prompt_len + args.max_new + 8,
-                    window_override=args.window or None)
-    prompts = jnp.ones((args.batch, args.prompt_len), jnp.int32)
-
-    t0 = time.perf_counter()
-    out = gen.generate(prompts, GenerateConfig(max_new_tokens=args.max_new,
-                                               temperature=args.temperature))
-    dt = time.perf_counter() - t0
-    n_new = args.batch * args.max_new
-    print(f"generated {n_new} tokens in {dt:.2f}s "
-          f"({n_new/dt:.1f} tok/s on this host)")
-    print("first sequence:", out[0].tolist())
-
-
-def run_continuous(cfg, params, args):
-    from repro.serve.api import HyperServe
-
+def serve_plan(args):
     scfg = ServeConfig(block_size=args.block_size,
                        num_blocks=args.num_blocks,
                        max_blocks_per_req=max(
@@ -50,18 +32,28 @@ def run_continuous(cfg, params, args):
                                 // args.block_size) + 1),
                        max_slots=args.slots,
                        prefill_chunk=args.prefill_chunk)
-    groups = {}
     if args.disaggregate:
-        from repro.core.mpmd import serving_groups
-        n = len(jax.devices())
-        if n < 2:
-            raise SystemExit("--disaggregate needs >= 2 devices "
-                             "(set XLA_FLAGS=--xla_force_host_platform_"
-                             "device_count=8 to try on CPU)")
-        gs = serving_groups(n // 2, n - n // 2)
-        groups = {"prefill_group": gs["prefill"], "decode_group": gs["decode"]}
-    serve = HyperServe(cfg, params, serve_cfg=scfg, **groups)
+        return plans.serve_disagg(serve=scfg)
+    return plans.serve(serve=scfg)
 
+
+def run_fixed(session, cfg, params, args):
+    prompts = np.ones((args.batch, args.prompt_len), np.int32)
+    t0 = time.perf_counter()
+    out = session.generate(cfg, params, prompts,
+                           max_new_tokens=args.max_new,
+                           temperature=args.temperature,
+                           max_len=args.prompt_len + args.max_new + 8,
+                           window_override=args.window or None)
+    dt = time.perf_counter() - t0
+    n_new = args.batch * args.max_new
+    print(f"generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s on this host)")
+    print("first sequence:", out[0].tolist())
+
+
+def run_continuous(session, cfg, params, args):
+    serve = session.serve(cfg, params, plan=serve_plan(args))
     rng = np.random.default_rng(0)
     rids = []
     t0 = time.perf_counter()
@@ -105,16 +97,28 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--disaggregate", action="store_true",
                     help="prefill/decode role split over device subgroups")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the serving plan resolution report and exit")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+
+    if args.disaggregate and len(jax.devices()) < 2:
+        raise SystemExit("--disaggregate needs >= 2 devices "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 to try on CPU)")
+    session = Supernode.auto()
+    if args.explain:
+        print(session.explain(serve_plan(args), cfg, batch=args.slots,
+                              for_serving=True))
+        return
     params = M.init_model(cfg, jax.random.PRNGKey(0))
     if args.continuous:
-        run_continuous(cfg, params, args)
+        run_continuous(session, cfg, params, args)
     else:
-        run_fixed(cfg, params, args)
+        run_fixed(session, cfg, params, args)
 
 
 if __name__ == "__main__":

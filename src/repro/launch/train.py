@@ -1,24 +1,23 @@
-"""Training launcher.
+"""Training launcher — a thin shell over the Supernode session API.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --shape train_4k [--reduced] [--steps 100] [--offload] \
+        [--plan fsdp_tp|tp_only|offload_all] [--explain] \
         [--moe-dispatch gshard|ragged] [--mesh auto|none]
 
 On this CPU container use ``--reduced`` (the full configs are exercised by
 the dry-run); on a real slice drop it and pass ``--mesh auto``.
+``--explain`` prints the plan-resolution report (every leaf's spec, memory
+tier and rule) and exits without training.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
-
+from repro.api import Supernode, plans
 from repro.configs.base import SHAPES, ShapeConfig, get_config
-from repro.core import offload as off
-from repro.core.hypershard import ShardingPlan
-from repro.launch.mesh import make_host_mesh
 from repro.optim.adamw import AdamWConfig
-from repro.train.trainer import TrainConfig, train
+from repro.train.trainer import TrainConfig
 
 
 def main():
@@ -28,8 +27,13 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--plan", default="fsdp_tp",
+                    choices=["fsdp_tp", "tp_only", "offload_all"],
+                    help="HyperPlan training preset to resolve")
     ap.add_argument("--offload", action="store_true",
                     help="HyperOffload: params+opt state on host")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the plan resolution report and exit")
     ap.add_argument("--moe-dispatch", default="gshard",
                     choices=["gshard", "ragged"])
     ap.add_argument("--mesh", default="none", choices=["none", "auto"])
@@ -43,22 +47,29 @@ def main():
     else:
         shape = SHAPES[args.shape]
 
-    mesh = make_host_mesh() if args.mesh == "auto" else None
-    plan = ShardingPlan() if mesh is not None else None
-    ocfg = off.OffloadConfig(params_on_host=args.offload,
-                             opt_state_on_host=args.offload)
+    session = Supernode.auto() if args.mesh == "auto" else Supernode()
+    # ONE declaration: --offload sets the plan, and the trainer derives the
+    # fetch/offload schedule from it (no parallel OffloadConfig to drift)
+    plan = plans.get(args.plan)()
+    if args.offload:
+        plan = plan.replace(params_on_host=True, opt_state_on_host=True)
+
+    if args.explain:
+        print(session.explain(plan, cfg, batch=shape.global_batch))
+        return
 
     def log(m):
         print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
               f"grad_norm {m['grad_norm']:.3f}  lr {m['lr']:.2e}  "
               f"{m['wall_s']:.1f}s", flush=True)
 
-    train(cfg, shape, mesh=mesh, plan=plan,
-          adamw=AdamWConfig(lr=args.lr, total_steps=args.steps),
-          train_cfg=TrainConfig(num_steps=args.steps, log_every=10,
-                                ckpt_every=args.steps if args.ckpt_dir else 0,
-                                ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt"),
-          offload_cfg=ocfg, moe_dispatch=args.moe_dispatch, hook=log)
+    session.train(cfg, shape, plan=plan,
+                  adamw=AdamWConfig(lr=args.lr, total_steps=args.steps),
+                  train_cfg=TrainConfig(
+                      num_steps=args.steps, log_every=10,
+                      ckpt_every=args.steps if args.ckpt_dir else 0,
+                      ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt"),
+                  moe_dispatch=args.moe_dispatch, hook=log)
 
 
 if __name__ == "__main__":

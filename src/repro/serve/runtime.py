@@ -41,6 +41,39 @@ from repro.serve.paged_kv import BlockManager, PagedKVPool
 from repro.serve.scheduler import ContinuousScheduler, Request, RequestState
 
 
+def _resolve_serve_plan(plan, mesh):
+    """Validate the caller's plan for serving; never silently rewrite it.
+
+    Historically a caller-supplied fsdp plan was silently overridden to
+    ``ShardingPlan(fsdp=None)``; now an fsdp-sharded plan is a typed
+    :class:`repro.api.errors.ServePlanError` explaining why, and only a
+    *missing* plan falls back to the serving default.  Returns
+    ``(ShardingPlan, ServeConfig | None)`` — the latter when the plan is a
+    HyperPlan that embeds serving knobs.
+    """
+    from repro.api.errors import ServePlanError
+    from repro.api.plan import HyperPlan
+
+    if plan is None:
+        return hypershard.ShardingPlan(fsdp=None), None
+    scfg = None
+    if isinstance(plan, HyperPlan):
+        from repro.core.layout import layout_for_mesh
+        plan.validate(layout_for_mesh(mesh) if mesh is not None else None)
+        scfg = plan.serve
+        plan = plan.sharding_plan()
+    if plan.fsdp:
+        raise ServePlanError(
+            f"plan shards parameters over fsdp={plan.fsdp}, which the "
+            "serving runtime cannot use: decode steps would all-gather every "
+            "weight each token (fsdp amortises gathers over a whole training "
+            "step; a one-token step has nothing to amortise against), and "
+            "the paged KV pool shards over tp/dp only.  Use "
+            "plan.replace(fsdp=None), or a serving preset "
+            "(repro.api.plans.serve() / serve_disagg()).")
+    return plan, scfg
+
+
 class ServeEngine:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  prefill_group: Optional[mpmd.ProcessGroup] = None,
@@ -48,15 +81,15 @@ class ServeEngine:
                  moe_dispatch: str = "gshard", seed: int = 0):
         from repro.configs.base import ServeConfig
         self.cfg = cfg
-        self.scfg = serve_cfg or ServeConfig()
-        scfg = self.scfg
         if (prefill_group is None) != (decode_group is None):
             raise ValueError("disaggregation needs BOTH prefill and decode "
                              "groups (or neither)")
         self.prefill_group = prefill_group
         self.decode_group = decode_group
         self.mesh = decode_group.mesh if decode_group is not None else mesh
-        self.plan = plan or hypershard.ShardingPlan(fsdp=None)
+        self.plan, plan_scfg = _resolve_serve_plan(plan, self.mesh)
+        self.scfg = serve_cfg or plan_scfg or ServeConfig()
+        scfg = self.scfg
         self.moe_dispatch = moe_dispatch
 
         self.pcfg = scfg.paged_config(model_dtype=cfg.dtype)

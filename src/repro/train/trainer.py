@@ -1,15 +1,23 @@
-"""Training loop: data -> step -> metrics -> checkpoints."""
+"""Training loop: data -> step -> metrics -> checkpoints.
+
+``train`` is plan-driven: pass a :class:`repro.api.HyperPlan` (or a legacy
+``ShardingPlan``, lifted automatically) and the memory-tier schedule —
+host-resident params / optimizer state, the fetch/offload legs between
+steps — is derived from the SAME declaration that derives shardings.
+The old ``offload_cfg=`` kwarg survives as a deprecation shim: it is
+folded into the plan (never specified alongside it twice), which fixes
+the historical footgun where ``--offload`` set an ``OffloadConfig`` but
+the plan never knew.
+"""
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
-import jax
-import numpy as np
-
 from repro.ckpt import checkpoint
-from repro.core import hypershard, offload as off
+from repro.core import offload as off
 from repro.data.pipeline import DataConfig, make_loader
 from repro.optim.adamw import AdamWConfig
 from repro.train import steps as steps_mod
@@ -24,36 +32,54 @@ class TrainConfig:
     seed: int = 0
 
 
+def resolve_train_plan(plan, offload_cfg, *, layout=None):
+    """One resolution step: (HyperPlan | ShardingPlan | None, legacy
+    OffloadConfig | None) -> validated (sharding_plan, offload_config)."""
+    from repro.api.plan import HyperPlan
+    hp = HyperPlan.coerce(plan)
+    if offload_cfg is not None:
+        warnings.warn(
+            "train(offload_cfg=...) is deprecated: declare offload intent on "
+            "the HyperPlan (e.g. plans.fsdp_tp(params_on_host=True)); the "
+            "legacy config was folded into the plan",
+            DeprecationWarning, stacklevel=3)
+        hp = hp.absorb_offload(offload_cfg)
+    hp.validate(layout)
+    return hp.sharding_plan(), hp.offload_config()
+
+
 def train(cfg, shape, *, mesh=None, plan=None, adamw: Optional[AdamWConfig] = None,
           train_cfg: TrainConfig = TrainConfig(),
-          offload_cfg: off.OffloadConfig = off.OffloadConfig(),
+          offload_cfg: Optional[off.OffloadConfig] = None,
           moe_dispatch: str = "gshard",
           hook: Optional[Callable] = None):
     """End-to-end training. Returns (params, history)."""
+    from repro.core.layout import layout_for_mesh
     adamw = adamw or AdamWConfig(total_steps=train_cfg.num_steps)
-    plan = plan or hypershard.ShardingPlan()
+    splan, ocfg = resolve_train_plan(
+        plan, offload_cfg,
+        layout=layout_for_mesh(mesh) if mesh is not None else None)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
                       global_batch=shape.global_batch, seed=train_cfg.seed)
 
     step_fn, shardings = steps_mod.make_train_step(
-        cfg, mesh, plan, adamw, offload_cfg=offload_cfg,
+        cfg, mesh, splan, adamw, offload_cfg=ocfg,
         moe_dispatch=moe_dispatch)
-    params, opt = steps_mod.init_state(cfg, mesh, plan, seed=train_cfg.seed,
-                                       offload_cfg=offload_cfg)
+    params, opt = steps_mod.init_state(cfg, mesh, splan, seed=train_cfg.seed,
+                                       offload_cfg=ocfg)
 
     loader = make_loader(dcfg, mesh)
     history = []
-    needs_offload = mesh is not None and (offload_cfg.params_on_host
-                                          or offload_cfg.opt_state_on_host)
+    needs_offload = mesh is not None and (ocfg.params_on_host
+                                          or ocfg.opt_state_on_host)
     t0 = time.perf_counter()
     for i, batch in zip(range(train_cfg.num_steps), loader):
         if needs_offload:
-            params, opt = steps_mod.fetch_state(params, opt, shardings,
-                                                offload_cfg)
+            params, opt = steps_mod.fetch_state(params, opt, shardings, ocfg)
         params, opt, metrics = step_fn(params, opt, batch)
         if needs_offload:
             params, opt = steps_mod.offload_state(params, opt, shardings,
-                                                  offload_cfg)
+                                                  ocfg)
         if (i + 1) % train_cfg.log_every == 0 or i == 0:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i + 1

@@ -1,0 +1,284 @@
+"""Public session API: HyperPlan resolution, Supernode verbs, typed errors,
+and the deprecation-shim equivalence guarantees (old kwargs == new plan)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (HyperPlan, IndivisibleError, PlanError, ServePlanError,
+                       Supernode, TopologyError, UnknownAxisError, plans)
+from repro.configs.base import ServeConfig, ShapeConfig, get_config
+from repro.core import hypershard
+from repro.core.layout import Layout
+from repro.core.offload import OffloadConfig
+from repro.models import model as M
+
+PROD_LAYOUT = Layout((2, 16, 16), ("pod", "data", "model"))
+
+# the acceptance trio: one dense, one MoE, one hybrid
+COVERAGE_ARCHS = ("granite-3-2b", "deepseek-moe-16b", "recurrentgemma-2b")
+
+
+# ---------------------------------------------------------------------------
+# explain: full-coverage resolution reports
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+@pytest.mark.parametrize("arch", COVERAGE_ARCHS)
+def test_explain_covers_every_leaf(arch):
+    """100% of param + cache leaves appear in the report, each with a spec,
+    a memory kind, and the rule that fired."""
+    cfg = get_config(arch).reduced()
+    session = Supernode()
+    report = session.explain(plans.fsdp_tp(), cfg)
+    n_params = len(jax.tree.leaves(jax.eval_shape(
+        lambda: M.init_model(cfg, jax.random.PRNGKey(0)))))
+    n_caches = len(jax.tree.leaves(jax.eval_shape(
+        lambda: M.init_caches(cfg, 1, max(cfg.sliding_window, 64)))))
+    c = report.coverage()
+    assert c["param"] == n_params, (arch, c)
+    assert c["cache"] == n_caches, (arch, c)
+    assert c["opt"] == 2 * n_params                  # AdamW mu + nu
+    for leaf in report.leaves:
+        assert leaf.rule, leaf
+        assert leaf.memory in ("device", "host")
+    text = str(report)
+    assert "divisibility fallbacks" in text
+
+
+@pytest.mark.smoke
+def test_explain_memory_kinds_follow_offload_intent():
+    cfg = get_config("qwen2-0.5b").reduced()
+    session = Supernode()
+    report = session.explain(plans.offload_all(), cfg)
+    hosted = [l for l in report.params if l.memory == "host"]
+    assert hosted, "offload_all must host-place the large leaves"
+    # 1-D leaves (norms) never host-place (XLA SPMD restriction)
+    assert all(len(l.shape) >= 2 for l in hosted)
+    # no offload intent -> everything on device
+    report2 = session.explain(plans.fsdp_tp(), cfg)
+    assert all(l.memory == "device" for l in report2.leaves)
+
+
+@pytest.mark.smoke
+def test_explain_strict_raises_on_silent_replication():
+    """4 reduced experts cannot divide the 16-way tp axis -> typed error."""
+    cfg = get_config("deepseek-moe-16b").reduced()
+    session = Supernode()
+    report = session.explain(plans.fsdp_tp(), cfg)
+    # force the production matrix, where reduced dims stop dividing
+    from repro.api.explain import explain
+    big = explain(plans.fsdp_tp(), cfg, PROD_LAYOUT)
+    assert big.fallbacks, "expected divisibility fallbacks on (2,16,16)"
+    with pytest.raises(IndivisibleError) as ei:
+        big.raise_on_fallback()
+    assert "silently replicate" in str(ei.value)
+    del report
+
+
+@pytest.mark.smoke
+def test_explain_strict_catches_cache_fallbacks():
+    """A KV cache that can neither shard heads nor absorb into seq must
+    surface as a fallback (strict mode), not vanish into a branch note."""
+    strat, note, fbs = hypershard.derive_cache(
+        "seg0/0/k", (2, 3, 100, 3, 64), PROD_LAYOUT, hypershard.ShardingPlan(),
+        batch=3)
+    assert strat.partition_spec() == jax.sharding.PartitionSpec(
+        None, None, None, None, None)
+    assert fbs and "unplaced" in fbs[0]
+    # ...and the absorbed-OK case records no fallback
+    _, _, ok_fbs = hypershard.derive_cache(
+        "seg0/0/k", (2, 3, 1024, 3, 64), PROD_LAYOUT,
+        hypershard.ShardingPlan(), batch=3)
+    assert ok_fbs == ()
+    # report-level: the fallback reaches PlanReport.fallbacks / strict mode
+    from repro.api.explain import explain
+    cfg = get_config("qwen2-0.5b").reduced()       # kv=2 heads, window=64
+    rep = explain(plans.fsdp_tp(), cfg, PROD_LAYOUT, batch=1, cache_len=100)
+    assert any(l.kind == "cache" for l in rep.fallbacks)
+    with pytest.raises(IndivisibleError):
+        rep.raise_on_fallback()
+
+
+@pytest.mark.smoke
+def test_session_train_rejects_role_plans():
+    session = Supernode()
+    cfg = get_config("qwen2-0.5b").reduced()
+    with pytest.raises(PlanError) as ei:
+        session.train(cfg, ShapeConfig("x", 32, 2, "train"),
+                      plan=plans.serve_disagg())
+    assert "roles" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# eager validation: typed PlanErrors
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+def test_unknown_axis_is_a_typed_error():
+    with pytest.raises(UnknownAxisError):
+        HyperPlan(tp=("modle",)).validate()
+    # a 'pod' plan on a pod-less mesh is the sanctioned degradation
+    HyperPlan().validate(Layout((2, 4), ("data", "model")))
+    # ...but a group that binds NO axis at all is an error
+    with pytest.raises(UnknownAxisError):
+        HyperPlan(tp=("pod",)).validate(Layout((2, 4), ("data", "model")))
+
+
+@pytest.mark.smoke
+def test_inconsistent_plans_rejected():
+    with pytest.raises(PlanError):
+        HyperPlan(stream_layers=True).validate()        # streaming w/o host
+    with pytest.raises(PlanError):
+        HyperPlan(prefetch_depth=0).validate()
+    with pytest.raises(PlanError):
+        HyperPlan(moe_weights="nope").validate()
+    with pytest.raises(PlanError):
+        HyperPlan(roles=(("a", 1), ("a", 2))).validate()
+
+
+@pytest.mark.smoke
+def test_serving_rejects_fsdp_plans_with_reason():
+    from repro.serve.runtime import _resolve_serve_plan
+    with pytest.raises(ServePlanError) as ei:
+        _resolve_serve_plan(hypershard.ShardingPlan(), None)
+    assert "fsdp" in str(ei.value) and "replace(fsdp=None)" in str(ei.value)
+    # the serving default and explicit fsdp=None plans still resolve
+    splan, _ = _resolve_serve_plan(None, None)
+    assert splan.fsdp is None
+    splan2, scfg = _resolve_serve_plan(plans.serve(), None)
+    assert splan2.fsdp is None and isinstance(scfg, ServeConfig)
+
+
+@pytest.mark.smoke
+def test_topology_errors():
+    with pytest.raises(TopologyError):
+        Supernode((4, 4))               # 16 devices on a 1-device container
+    with pytest.raises(TopologyError):
+        Supernode((2, 2), axis_names=("data",))
+    s = Supernode()
+    with pytest.raises(TopologyError):
+        s.resolve(plans.serve_disagg())  # roles need >= 2 devices
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old and new paths must resolve identically
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+@pytest.mark.parametrize("arch", COVERAGE_ARCHS)
+def test_legacy_sharding_plan_and_hyperplan_specs_identical(arch):
+    """Acceptance: old ShardingPlan path == HyperPlan path, spec for spec."""
+    cfg = get_config(arch)
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    paths, leaves, _ = hypershard.tree_paths(pshapes)
+    legacy = hypershard.ShardingPlan()
+    lowered = plans.fsdp_tp().sharding_plan()
+    for path, leaf in zip(paths, leaves):
+        old = hypershard.param_strategy(path, tuple(leaf.shape), PROD_LAYOUT,
+                                        legacy).partition_spec()
+        new = hypershard.param_strategy(path, tuple(leaf.shape), PROD_LAYOUT,
+                                        lowered).partition_spec()
+        assert old == new, (path, old, new)
+    cshapes = jax.eval_shape(lambda: M.init_caches(cfg, 128, 1024))
+    cpaths, cleaves, _ = hypershard.tree_paths(cshapes)
+    for path, leaf in zip(cpaths, cleaves):
+        old = hypershard.cache_strategy(path, tuple(leaf.shape), PROD_LAYOUT,
+                                        legacy, batch=128).partition_spec()
+        new = hypershard.cache_strategy(path, tuple(leaf.shape), PROD_LAYOUT,
+                                        lowered, batch=128).partition_spec()
+        assert old == new, (path, old, new)
+
+
+@pytest.mark.smoke
+def test_legacy_offload_kwarg_folds_into_plan_with_warning():
+    from repro.train.trainer import resolve_train_plan
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        splan, ocfg = resolve_train_plan(
+            None, OffloadConfig(params_on_host=True, opt_state_on_host=True))
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    splan2, ocfg2 = resolve_train_plan(
+        plans.fsdp_tp(params_on_host=True, opt_state_on_host=True), None)
+    assert ocfg == ocfg2
+    assert splan == splan2
+    # jit steps stay pure-device: the lowered ShardingPlan never carries
+    # the host flags (they lower exclusively into the OffloadConfig leg)
+    assert not splan.params_on_host and not splan.opt_state_on_host
+    assert ocfg.params_on_host and ocfg.opt_state_on_host
+
+
+@pytest.mark.smoke
+def test_conflicting_prefetch_depth_is_an_error():
+    with pytest.raises(PlanError):
+        plans.offload_all(stream_layers=True, prefetch_depth=3).absorb_offload(
+            OffloadConfig(prefetch_depth=5))
+
+
+@pytest.mark.smoke
+def test_preset_registry():
+    assert set(plans.names()) >= {"fsdp_tp", "tp_only", "serve",
+                                  "serve_disagg", "offload_all"}
+    assert plans.get("fsdp_tp")() == plans.fsdp_tp()
+    with pytest.raises(KeyError):
+        plans.get("nope")
+    # presets compose with overrides (the strategy algebra)
+    p = plans.fsdp_tp(params_on_host=True)
+    assert p.params_on_host and p.fsdp == ("pod", "data")
+    d = plans.serve_disagg(3, 5)
+    assert d.roles_dict() == {"prefill": 3, "decode": 5}
+
+
+# ---------------------------------------------------------------------------
+# session verbs end-to-end (single device)
+# ---------------------------------------------------------------------------
+def test_session_train_then_generate():
+    cfg = get_config("qwen2-0.5b").reduced()
+    session = Supernode.auto()
+    from repro.train.trainer import TrainConfig
+    params, hist = session.train(
+        cfg, ShapeConfig("api", 32, 2, "train"), plan=plans.fsdp_tp(),
+        train_cfg=TrainConfig(num_steps=3, log_every=1))
+    assert jnp.isfinite(jnp.float32(hist[-1]["loss"]))
+    out = session.generate(cfg, params, np.ones((2, 8), np.int32),
+                           max_new_tokens=4)
+    assert out.shape == (2, 12)
+
+
+def test_session_serve_matches_generate():
+    cfg = get_config("qwen2-0.5b").reduced()
+    session = Supernode()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    prompt = list(range(1, 9))
+    want = session.generate(cfg, params, np.asarray([prompt], np.int32),
+                            max_new_tokens=5, max_len=64)[0, 8:].tolist()
+    serve = session.serve(cfg, params, plan=plans.serve(
+        serve=ServeConfig(block_size=4, num_blocks=32, max_blocks_per_req=8,
+                          max_slots=2, prefill_chunk=4)))
+    rid = serve.submit(prompt, 5)
+    out = serve.join()
+    assert out[rid] == want
+
+
+def test_session_serve_rejects_training_plan():
+    cfg = get_config("qwen2-0.5b").reduced()
+    session = Supernode()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ServePlanError):
+        session.serve(cfg, params, plan=plans.fsdp_tp())
+
+
+def test_session_disagg_roles_resolve_on_8_devices():
+    """Role carving + the full serve path under a forced 8-device mesh."""
+    from tests.conftest import run_subprocess
+    run_subprocess("""
+from repro.api import Supernode, plans
+s = Supernode((1, 8))
+res = s.resolve(plans.serve_disagg())
+assert set(res.groups) == {"prefill", "decode"}
+assert res.groups["prefill"].num_devices == 4
+assert res.groups["decode"].num_devices == 4
+res2 = s.resolve(plans.serve_disagg(2, 6))
+assert res2.groups["prefill"].num_devices == 2
+assert res2.groups["decode"].num_devices == 6
+print("ROLES-OK")
+""", devices=8)

@@ -132,3 +132,82 @@ def test_cache_strategy_always_divides(batch, kv, log_seq):
     shape = (24, batch, seq, kv, 64)
     s = cache_strategy("seg0/0/k", shape, LAYOUT, PLAN, batch=batch)
     assert s.divisible(shape)
+
+
+# ---------------------------------------------------------------------------
+# property coverage: param divisibility fallback + cache absorption branches
+# (LAYOUT sizes: pod=2, data=16, model=16; fsdp = pod*data = 32)
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=150, deadline=None)
+def test_param_fallback_drops_axes_outermost_first(d_in, d_out):
+    """The fsdp dim keeps ('pod','data') iff %32==0, degrades to ('data',)
+    iff %16==0, else replicates; the tp dim is all-or-nothing.  The derived
+    spec always divides the shape."""
+    shape = (24, d_in, d_out)
+    strat = param_strategy("seg0/0/attn/wq", shape, LAYOUT, PLAN)
+    sp = strat.partition_spec()
+    if d_in % 32 == 0:
+        assert sp[1] == ("pod", "data")
+    elif d_in % 16 == 0:
+        assert sp[1] == "data"
+    else:
+        assert sp[1] is None
+    assert sp[2] == ("model" if d_out % 16 == 0 else None)
+    assert strat.divisible(shape)
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=150, deadline=None)
+def test_param_fallback_is_reported(d_in, d_out):
+    """derive_param's notes flag exactly the dims that fell back."""
+    from repro.core.hypershard import derive_param
+    _, rule, notes = derive_param("seg0/0/attn/wq", (24, d_in, d_out),
+                                  LAYOUT, PLAN)
+    assert rule is not None
+    expect = (d_in % 32 != 0) + (d_out % 16 != 0)
+    assert len(notes) == expect, (d_in, d_out, notes)
+
+
+@given(st.integers(1, 256), st.integers(1, 64), st.integers(6, 16))
+@settings(max_examples=150, deadline=None)
+def test_cache_batch_and_seq_absorption_branches(batch, kv, log_seq):
+    """The KV-cache derivation's absorption ladder (dp=32, tp=16):
+
+    - batch % 32 == 0      -> batch shards over dp, else seq absorbs dp
+    - kv heads % 16 == 0   -> heads shard over tp, else seq absorbs tp
+    - seq takes exactly the absorbed axes when it divides them
+    """
+    seq = 2 ** log_seq
+    shape = (24, batch, seq, kv, 64)
+    s = cache_strategy("seg0/0/k", shape, LAYOUT, PLAN, batch=batch)
+    sp = s.partition_spec()
+    batch_ok = batch % 32 == 0
+    heads_ok = kv % 16 == 0
+    assert sp[1] == (("pod", "data") if batch_ok else None)
+    assert sp[3] == ("model" if heads_ok else None)
+    absorbed = (() if batch_ok else ("pod", "data")) + \
+        (() if heads_ok else ("model",))
+    need = (1 if batch_ok else 32) * (1 if heads_ok else 16)
+    if absorbed and seq % need == 0:
+        want = absorbed if len(absorbed) > 1 else absorbed[0]
+        assert sp[2] == want, (batch, kv, seq, sp)
+    assert s.divisible(shape)
+
+
+@given(st.integers(1, 256), st.integers(6, 16))
+@settings(max_examples=100, deadline=None)
+def test_mla_cache_seq_absorbs_dp_and_tp(batch, log_seq):
+    """MLA latent caches have no head dim: seq absorbs tp always, plus dp
+    when the batch doesn't divide."""
+    seq = 2 ** log_seq
+    shape = (26, batch, seq, 512)
+    sp = cache_strategy("seg1/0/ckv", shape, LAYOUT, PLAN,
+                        batch=batch).partition_spec()
+    batch_ok = batch % 32 == 0
+    absorbed = (() if batch_ok else ("pod", "data")) + ("model",)
+    need = 16 * (1 if batch_ok else 32)
+    if seq % need == 0:
+        assert sp[2] == (absorbed if len(absorbed) > 1 else absorbed[0])
+    else:
+        assert sp[2] is None

@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""CI gate for the public session API (wired into `make check`).
+
+Imports ``repro.api``, resolves a grid of plan presets x reduced model
+configs through ``Supernode.explain`` and asserts that (a) no PlanError
+fires and (b) every parameter and cache leaf is covered by the report —
+the acceptance bar for the declarative front door.  Also proves the typed
+validation actually rejects a broken plan.
+
+Exit code 0 on success; prints one line per (preset, config) pair.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+PRESETS = ("fsdp_tp", "offload_all")
+ARCHS = ("qwen2-0.5b", "deepseek-moe-16b")
+
+
+def main() -> int:
+    import jax
+
+    from repro.api import HyperPlan, PlanError, Supernode, plans
+    from repro.configs.base import get_config
+    from repro.models import model as M
+
+    session = Supernode()
+    failures = 0
+    for preset in PRESETS:
+        for arch in ARCHS:
+            cfg = get_config(arch).reduced()
+            try:
+                report = session.explain(plans.get(preset)(), cfg)
+            except PlanError as e:
+                print(f"FAIL {preset} x {arch}: {type(e).__name__}: {e}")
+                failures += 1
+                continue
+            n_params = len(jax.tree.leaves(jax.eval_shape(
+                lambda c=cfg: M.init_model(c, jax.random.PRNGKey(0)))))
+            n_caches = len(jax.tree.leaves(jax.eval_shape(
+                lambda c=cfg: M.init_caches(c, 1, 64))))
+            c = report.coverage()
+            ok = c["param"] == n_params and c["cache"] == n_caches
+            print(f"{'OK  ' if ok else 'FAIL'} {preset} x {arch}: "
+                  f"{c['param']}/{n_params} params, "
+                  f"{c['cache']}/{n_caches} caches, "
+                  f"{c['fallbacks']} fallbacks")
+            if not ok:
+                failures += 1
+
+    # the validator must actually validate
+    try:
+        session.explain(HyperPlan(tp=("not-an-axis",)),
+                        get_config(ARCHS[0]).reduced())
+        print("FAIL validation: unknown axis was accepted")
+        failures += 1
+    except PlanError:
+        print("OK   validation: unknown axis rejected with a typed PlanError")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
