@@ -10,11 +10,22 @@ arrivals, mixed prompt lengths and token budgets, seeded):
                      and the paged pool multiplexes HBM blocks.
 
 Reports aggregate tokens/sec, p50/p99 request latency, time-to-first-
-token, and peak HBM block occupancy; writes ``results/BENCH_serve.json``.
-The gain is the paper's supernode-affinity serving claim in miniature:
-batched decode amortises weight reads, so aggregate throughput rises
-while per-request latency stays bounded.
+token, and peak HBM block occupancy.  Two artifacts, so the perf
+trajectory distinguishes model families:
+
+  - ``results/BENCH_serve.json``        attention baseline (qwen2-0.5b);
+  - ``results/BENCH_serve_hybrid.json`` hybrid RG-LRU + windowed local
+    attention (recurrentgemma-2b) — slot state + window freeing on the
+    hot path.
+
+Each payload records the config name and its mixer mix (which mixer
+kinds, how many layers each) plus the serving-state layout the mixer
+registry resolved.  The gain is the paper's supernode-affinity serving
+claim in miniature: batched decode amortises weight reads, so aggregate
+throughput rises while per-request latency stays bounded.
 """
+import collections
+import dataclasses
 import time
 
 import jax
@@ -22,13 +33,26 @@ import numpy as np
 
 from benchmarks.common import emit_json, percentile, row
 from repro.configs.base import ServeConfig, get_config
+from repro.models import mixers as MX
 from repro.models import model as M
 from repro.serve.api import HyperServe
 
 ARCH = "qwen2-0.5b"
+HYBRID_ARCH = "recurrentgemma-2b"
 N_REQUESTS = 10
 MEAN_INTERARRIVAL_STEPS = 2          # Poisson arrivals, in engine steps
 SEED = 0
+
+
+def _mixer_mix(cfg):
+    """{"mixer mix": {kind: layer count}, "state": {kind: paged|slot|...}}"""
+    counts = collections.Counter(mx for mx, _ in cfg.block_kinds())
+    layout = MX.model_state_layout(cfg)
+    states = {sp.kind: sp.state for seg in layout.segments
+              for sp in seg.specs}
+    return {"mixers": dict(counts), "state_kinds": states,
+            "free_window": layout.free_window,
+            "has_slot_state": layout.has_slot_state}
 
 
 def _workload(cfg, rng):
@@ -114,8 +138,7 @@ def bench_continuous(cfg, params, workload):
     return res, serve
 
 
-def run():
-    cfg = get_config(ARCH).reduced()
+def _run_arch(cfg, artifact: str, tag: str):
     params = M.init_model(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(SEED)
     workload = _workload(cfg, rng)
@@ -125,19 +148,20 @@ def run():
     st = serve.stats()
     speedup = cont["tokens_per_sec"] / serial["tokens_per_sec"]
 
-    row("serve.serial_tok_s", 0.0,
+    row(f"serve.{tag}.serial_tok_s", 0.0,
         f"{serial['tokens_per_sec']:.1f} tok/s p50={serial['latency_p50_s']:.2f}s "
         f"p99={serial['latency_p99_s']:.2f}s (one request at a time)")
-    row("serve.continuous_tok_s", 0.0,
+    row(f"serve.{tag}.continuous_tok_s", 0.0,
         f"{cont['tokens_per_sec']:.1f} tok/s p50={cont['latency_p50_s']:.2f}s "
         f"p99={cont['latency_p99_s']:.2f}s "
         f"peak_occ={cont['peak_block_occupancy']:.2f}")
-    row("serve.continuous_speedup", 0.0,
+    row(f"serve.{tag}.continuous_speedup", 0.0,
         f"{speedup:.2f}x aggregate throughput (continuous batching, "
         f"preemptions={st['preemptions']})")
 
     payload = {
-        "arch": ARCH,
+        "arch": cfg.name,
+        "model": _mixer_mix(cfg),
         "workload": {"requests": N_REQUESTS,
                      "poisson_mean_steps": MEAN_INTERARRIVAL_STEPS,
                      "seed": SEED},
@@ -147,9 +171,19 @@ def run():
         "speedup_tokens_per_sec": speedup,
         "engine_stats": {k: float(v) for k, v in st.items()},
     }
-    path = emit_json("BENCH_serve.json", payload)
-    row("serve.artifact", 0.0, path)
+    path = emit_json(artifact, payload)
+    row(f"serve.{tag}.artifact", 0.0, path)
     return payload
+
+
+def run():
+    out = _run_arch(get_config(ARCH).reduced(), "BENCH_serve.json", "attn")
+    # hybrid: RG-LRU slot state + windowed LOCAL_ATTN with block freeing
+    # (3 layers so the reduced config actually contains a local layer)
+    hyb = dataclasses.replace(get_config(HYBRID_ARCH).reduced(),
+                              num_layers=3, sliding_window=16)
+    out_h = _run_arch(hyb, "BENCH_serve_hybrid.json", "hybrid")
+    return {"attn": out, "hybrid": out_h}
 
 
 if __name__ == "__main__":

@@ -31,11 +31,12 @@ SINGLE_DEVICE_LAYOUT = Layout((1, 1), ("data", "model"))
 
 @dataclasses.dataclass(frozen=True)
 class LeafReport:
-    kind: str                  # "param" | "opt" | "cache"
+    kind: str                  # "param" | "opt" | "cache" | "state"
     path: str
     shape: Tuple[int, ...]
     spec: object               # jax.sharding.PartitionSpec
-    memory: str                # "device" | "host"
+    memory: str                # "device" | "host" | serving-state kind
+    #                            ("paged" | "slot" | "windowed(w=N)")
     rule: str                  # rule regex / cache branch that fired
     notes: Tuple[str, ...]     # divisibility fallbacks etc.
 
@@ -67,12 +68,18 @@ class PlanReport:
         return self.select("opt")
 
     @property
+    def serve_state(self):
+        """Serving-state rows (paged pools + per-slot dense leaves)."""
+        return self.select("state")
+
+    @property
     def fallbacks(self) -> Tuple[LeafReport, ...]:
         return tuple(l for l in self.leaves if l.fell_back)
 
     def coverage(self) -> dict:
         return {"param": len(self.params), "opt": len(self.opt),
-                "cache": len(self.caches), "fallbacks": len(self.fallbacks)}
+                "cache": len(self.caches), "state": len(self.serve_state),
+                "fallbacks": len(self.fallbacks)}
 
     def raise_on_fallback(self) -> "PlanReport":
         """strict mode: any silently-replicated dim is an IndivisibleError."""
@@ -99,6 +106,7 @@ class PlanReport:
         c = self.coverage()
         rows.append(f"{c['param']} params, {c['opt']} opt leaves, "
                     f"{c['cache']} cache leaves, "
+                    f"{c['state']} serving-state leaves, "
                     f"{c['fallbacks']} divisibility fallbacks")
         return "\n".join(rows)
 
@@ -113,8 +121,18 @@ def _spec_offloadable(spec, layout: Layout) -> bool:
 
 def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
             batch: int = 1, cache_len: Optional[int] = None,
-            with_opt: bool = True, with_cache: bool = True) -> PlanReport:
-    """Resolve ``plan`` for ``cfg`` on ``layout``; return the full report."""
+            with_opt: bool = True, with_cache: bool = True,
+            serving: bool = False) -> PlanReport:
+    """Resolve ``plan`` for ``cfg`` on ``layout``; return the full report.
+
+    ``serving=True`` additionally resolves the HyperServe
+    :class:`~repro.serve.paged_kv.StatePool` the plan's ServeConfig would
+    build: one row per pool leaf with the mixer registry's state kind
+    (``paged`` / ``slot`` / ``windowed(w=N)``) in the memory column and
+    the :func:`~repro.core.hypershard.derive_pool` rule that fired.  A
+    config the serving runtime cannot host raises the same typed
+    ``ServePlanError`` the runtime would, naming the offending mixer.
+    """
     import jax
 
     from repro.models import model as M
@@ -155,6 +173,33 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
             leaves.append(LeafReport("cache", path, tuple(leaf.shape),
                                      strat.partition_spec(), "device",
                                      note, fbs))
+
+    if serving:
+        from repro.models import mixers as MX
+        from repro.serve.paged_kv import StatePool
+
+        scfg = plan.serve_config()
+        pcfg = scfg.paged_config(model_dtype=cfg.dtype)
+        st_layout = MX.model_state_layout(cfg)   # typed error if unservable
+        if plan.roles_dict():
+            # disagg plans preflight the same rule ServeEngine enforces
+            MX.check_disagg_supported(cfg, st_layout)
+        pool_shapes = jax.eval_shape(
+            lambda: StatePool(cfg, pcfg, num_slots=scfg.max_slots).state)
+        for seg in st_layout.segments:
+            for j, spec in enumerate(seg.specs):
+                kind_desc = spec.state
+                if spec.state == MX.WINDOWED:
+                    kind_desc += f"(w={spec.window(cfg)})"
+                spaths, sleaves, _ = hypershard.tree_paths(
+                    pool_shapes[seg.name][j])
+                for name, leaf in zip(spaths, sleaves):
+                    path = f"{seg.name}/{j}.{spec.kind}/{name}"
+                    strat, note, fbs = hypershard.derive_pool(
+                        path, tuple(leaf.shape), layout, splan)
+                    leaves.append(LeafReport(
+                        "state", path, tuple(leaf.shape),
+                        strat.partition_spec(), kind_desc, note, fbs))
 
     return PlanReport(plan, getattr(cfg, "name", str(cfg)), layout,
                       tuple(leaves))

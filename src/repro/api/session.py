@@ -191,7 +191,7 @@ class Supernode:
                              moe_dispatch=moe_dispatch, hook=hook)
 
     def serve(self, cfg, params, *, plan: Union[None, HyperPlan, object] = None,
-              seed: int = 0, moe_dispatch: str = "gshard"):
+              seed: int = 0, moe_dispatch: Optional[str] = None):
         """Continuous-batching HyperServe runtime under the resolved plan."""
         from repro.serve.api import HyperServe
         res = self.resolve(plan, for_serving=True)
@@ -209,7 +209,8 @@ class Supernode:
     def generate(self, cfg, params, prompts, *, max_new_tokens: int = 16,
                  temperature: float = 0.0, max_len: Optional[int] = None,
                  window_override: Optional[int] = None,
-                 plan: Union[None, HyperPlan, object] = None, seed: int = 0):
+                 plan: Union[None, HyperPlan, object] = None, seed: int = 0,
+                 moe_dispatch: Optional[str] = None):
         """Fixed-batch generation (prefill + sequential decode)."""
         import jax.numpy as jnp
 
@@ -220,7 +221,8 @@ class Supernode:
             prompts = prompts[None, :]
         gen = Generator(cfg, params, mesh=self.mesh, plan=res.sharding,
                         max_len=max_len or prompts.shape[1] + max_new_tokens + 8,
-                        window_override=window_override)
+                        window_override=window_override,
+                        moe_dispatch=moe_dispatch)
         return gen.generate(prompts, GenerateConfig(
             max_new_tokens=max_new_tokens, temperature=temperature, seed=seed))
 
@@ -228,9 +230,12 @@ class Supernode:
                 batch: int = 1, cache_len: Optional[int] = None,
                 strict: bool = False, for_serving: bool = False) -> PlanReport:
         """Resolution report: every param/opt/cache leaf with spec, memory
-        kind and the rule that fired.  ``strict=True`` raises
+        kind and the rule that fired.  ``for_serving=True`` additionally
+        reports the HyperServe StatePool leaves with their paged / slot /
+        windowed state kind.  ``strict=True`` raises
         :class:`IndivisibleError` on any silent-replication fallback."""
         hp = HyperPlan.coerce(plan, for_serving=for_serving)
         report = explain(hp, cfg, self.layout or SINGLE_DEVICE_LAYOUT,
-                         batch=batch, cache_len=cache_len)
+                         batch=batch, cache_len=cache_len,
+                         serving=for_serving)
         return report.raise_on_fallback() if strict else report

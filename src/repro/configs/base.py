@@ -23,6 +23,12 @@ RGLRU = "rglru"          # RecurrentGemma RG-LRU block
 DENSE_FFN = "dense"      # SwiGLU MLP
 MOE_FFN = "moe"          # shared + routed experts
 
+# Every mixer kind a ModelConfig may emit from block_kinds().  The mixer
+# registry (repro.models.mixers) must carry a MixerSpec — including its
+# paged/slot/windowed serving StateSpec — for each entry; tools/check_api.py
+# gates this, so adding a kind here without registering it fails `make check`.
+MIXER_KINDS = (ATTN, LOCAL_ATTN, MLA, SSD, RGLRU)
+
 
 @dataclass(frozen=True)
 class MoEConfig:

@@ -304,6 +304,58 @@ def cache_strategy(path: str, shape: Tuple[int, ...], layout: Layout,
     return derive_cache(path, shape, layout, plan, batch=batch)[0]
 
 
+def derive_pool(path: str, shape: Tuple[int, ...], layout: Layout,
+                plan: ShardingPlan):
+    """Serving StatePool leaf derivation: ``(ShardStrategy, note, fallbacks)``.
+
+    StatePool leaves (dim0 is always the stacked-layer axis):
+
+      k/v           (L, N_blocks, block, KV, hd)  paged attention pool
+      ckv / krope   (L, N_blocks, block, R)       paged MLA latent pool
+      state         (L, slots, H, P, N) or (L, slots, W)  per-slot SSD/RG-LRU
+      conv          (L, slots, K-1, C)            per-slot causal-conv tail
+
+    Paged pools are shared by every request, so they replicate over the
+    data axes; the KV-head dim shards over tp when divisible (the
+    ``cache_strategy`` rule, pool edition).  MLA latents have no head dim
+    — they replicate.  Per-slot dense state shards its head/channel dim
+    over tp when divisible, mirroring the dense decode-cache derivation.
+
+    ``fallbacks`` records every tp placement that could not bind (the
+    strict-validation signal, same contract as :func:`derive_cache`).
+    """
+    tp = tuple(a for a in (plan.tp or ()) if a in layout.alias_name)
+    ndim = len(shape)
+    entries: list = [None] * ndim
+    notes: list = []
+    fallbacks: list = []
+    tp_n = math.prod(layout.axis_size(a) for a in tp) if tp else 1
+    leaf = path.rsplit("/", 1)[-1]
+
+    def try_tp(dim_idx: int, what: str):
+        if not tp:
+            return
+        if shape[dim_idx] % tp_n == 0:
+            entries[dim_idx] = _fit(tp)
+            notes.append(f"{what}/tp")
+        else:
+            fallbacks.append(f"{what} {shape[dim_idx]} % {tp_n} != 0 -> "
+                             f"{tp} unplaced, replicated")
+
+    if leaf in ("k", "v"):
+        try_tp(3, "kv-heads")
+    elif leaf in ("ckv", "krope"):
+        notes.append("latent pool replicated (rank shared across heads)")
+    elif leaf == "state" and ndim >= 3:
+        try_tp(2, "state-heads")
+    elif leaf == "conv" and ndim >= 4:
+        try_tp(3, "conv-channels")
+
+    note = "pool[" + leaf + "]: " + (", ".join(notes) if notes
+                                     else "replicated")
+    return layout(*entries), note, tuple(fallbacks)
+
+
 def make_cache_shardings(mesh: Mesh, cache_shape, plan: ShardingPlan, *,
                          batch: int, memory_kind: Optional[str] = None):
     layout = layout_for_mesh(mesh)

@@ -51,10 +51,13 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
                               interpret=not use)
 
 
-def decode_attention(q, k_cache, v_cache, length, *, scale=None):
+def decode_attention(q, k_cache, v_cache, length, *, scale=None, window=None):
     use = _use_pallas()
-    if use is None:
-        return ref.decode_attention(q, k_cache, v_cache, length, scale=scale)
+    if use is None or window is not None:
+        # the Pallas decode kernel has no sliding-window mask yet; windowed
+        # paged decode (LOCAL_ATTN under HyperServe) takes the oracle path
+        return ref.decode_attention(q, k_cache, v_cache, length, scale=scale,
+                                    window=window)
     from repro.kernels import decode_attention as da
     return da.decode_attention(q, k_cache, v_cache, length, scale=scale,
                                interpret=not use)

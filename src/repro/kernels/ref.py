@@ -144,6 +144,7 @@ def decode_attention(
     length: jax.Array,       # (B,) valid cache entries (absolute positions)
     *,
     scale: Optional[float] = None,
+    window: Optional[int] = None,   # sliding window: keys < length-window masked
 ) -> jax.Array:
     """Single-token decode attention oracle. Returns (B, 1, H, Dv)."""
     B, _, H, Dk = q.shape
@@ -153,6 +154,10 @@ def decode_attention(
     qh = q.reshape(B, KV, G, Dk).astype(jnp.float32) * scale
     s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache.astype(jnp.float32))
     mask = jnp.arange(S)[None, :] < length[:, None]            # (B, S)
+    if window is not None:
+        # cache rows indexed by absolute position (paged gather): only the
+        # last `window` positions before the query are in the window
+        mask &= jnp.arange(S)[None, :] >= length[:, None] - window
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))

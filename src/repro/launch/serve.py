@@ -19,7 +19,7 @@ import time
 import jax
 import numpy as np
 
-from repro.api import Supernode, plans
+from repro.api import PlanError, Supernode, plans
 from repro.configs.base import ServeConfig, get_config
 from repro.models import model as M
 
@@ -110,15 +110,22 @@ def main():
                          "(set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 to try on CPU)")
     session = Supernode.auto()
-    if args.explain:
-        print(session.explain(serve_plan(args), cfg, batch=args.slots,
-                              for_serving=True))
-        return
-    params = M.init_model(cfg, jax.random.PRNGKey(0))
-    if args.continuous:
-        run_continuous(session, cfg, params, args)
-    else:
-        run_fixed(session, cfg, params, args)
+    try:
+        if args.explain:
+            # includes one row per serving-state leaf: paged / slot /
+            # windowed(w=N) kind + the derive_pool rule that fired
+            print(session.explain(serve_plan(args), cfg, batch=args.slots,
+                                  for_serving=True))
+            return
+        params = M.init_model(cfg, jax.random.PRNGKey(0))
+        if args.continuous:
+            run_continuous(session, cfg, params, args)
+        else:
+            run_fixed(session, cfg, params, args)
+    except PlanError as e:
+        # typed validation (ServePlanError et al.): the message already
+        # names the offending mixer/rule — surface it without a traceback
+        raise SystemExit(f"{type(e).__name__}: {e}")
 
 
 if __name__ == "__main__":

@@ -131,7 +131,7 @@ def attn_prefill(p, x, positions, cfg, *, window: Optional[int] = None):
 
 
 def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
-                      block_size: int):
+                      block_size: int, window: Optional[int] = None):
     """One-token decode against the paged KV pool (HyperServe).
 
     x: (B, 1, D) — one token per batch slot; ``positions``: (B,) absolute
@@ -140,6 +140,10 @@ def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     (N_blocks, block, KV, hd) — the stacked-layer axis has already been
     sliced off by the caller's scan.  ``block_tables``: (B, W) int32; row
     padding entries point at the null block and are never unmasked.
+
+    ``window`` (LOCAL_ATTN): keys below ``pos + 1 - window`` are masked,
+    so the runtime may free their blocks (table entries repointed at the
+    null block) without changing the result.
     """
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -152,13 +156,15 @@ def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     W = block_tables.shape[1]
     k_seq = k_pool[block_tables].reshape(B, W * block_size, KV, hd)
     v_seq = v_pool[block_tables].reshape(B, W * block_size, KV, hd)
-    out = ops.decode_attention(q, k_seq, v_seq, (positions + 1).astype(jnp.int32))
+    out = ops.decode_attention(q, k_seq, v_seq,
+                               (positions + 1).astype(jnp.int32),
+                               window=window)
     y = out.reshape(B, 1, H * hd) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 
 
 def attn_prefill_paged(p, x, start, limit, cfg, kv, block_table, *,
-                       block_size: int):
+                       block_size: int, window: Optional[int] = None):
     """One chunk of chunked prefill against the paged KV pool.
 
     x: (1, C, D) — a chunk of one request's prompt, whose first token sits
@@ -169,6 +175,7 @@ def attn_prefill_paged(p, x, start, limit, cfg, kv, block_table, *,
     prompt's true length: chunk rows at positions >= limit are padding —
     their page writes are routed to the null block and their outputs are
     the caller's to ignore.  ``block_table``: (W,) this request's table.
+    ``window`` applies the LOCAL_ATTN sliding window to the gathered keys.
     """
     _, C, _ = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -184,7 +191,8 @@ def attn_prefill_paged(p, x, start, limit, cfg, kv, block_table, *,
     W = block_table.shape[0]
     k_seq = k_pool[block_table].reshape(1, W * block_size, KV, hd)
     v_seq = v_pool[block_table].reshape(1, W * block_size, KV, hd)
-    out = ops.flash_attention(q, k_seq, v_seq, causal=True, q_offset=start)
+    out = ops.flash_attention(q, k_seq, v_seq, causal=True, q_offset=start,
+                              window=window)
     y = out.reshape(1, C, H * hd) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 

@@ -78,6 +78,101 @@ def init_mla_cache(cfg, batch: int, cache_len: int, dtype):
     }
 
 
+def init_mla_pool(cfg, num_blocks: int, block_size: int, dtype):
+    """Paged serving state: the compressed latents page just like KV —
+    one (N_blocks, block, R) pool per leaf instead of per-request rows.
+    MLA's memory edge carries over: pages store rank-R latents, not
+    per-head K/V."""
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_blocks, block_size, m.qk_rope_head_dim),
+                           dtype),
+    }
+
+
+def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
+                     block_size: int):
+    """Absorbed-matmul decode against the paged latent pool (HyperServe).
+
+    x: (B, 1, D) one token per slot; ``positions``: (B,) per-slot absolute
+    write positions; ``kv``: {"ckv","krope"} pool leaves (N_blocks, block,
+    R) / (N_blocks, block, rope); ``block_tables``: (B, W).  Gathered rows
+    are indexed by absolute position, exactly like the dense latent cache,
+    so the score/readout math is identical to :func:`mla_decode`.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope, c_new, kr_new = _latents(p, x, positions[:, None], cfg)
+
+    bidx = jnp.take_along_axis(
+        block_tables, (positions // block_size)[:, None], axis=1)[:, 0]
+    off = positions % block_size
+    ckv_pool = kv["ckv"].at[bidx, off].set(c_new[:, 0])
+    krope_pool = kv["krope"].at[bidx, off].set(kr_new[:, 0])
+    W = block_tables.shape[1]
+    S = W * block_size
+    ckv = ckv_pool[block_tables].reshape(B, S, m.kv_lora_rank)
+    krope = krope_pool[block_tables].reshape(B, S, m.qk_rope_head_dim)
+
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)       # (B,H,R)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                      krope.astype(jnp.float32))) * scale
+    mask = jnp.arange(S)[None, None, :] < (positions + 1)[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    y = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return y, {"ckv": ckv_pool, "krope": krope_pool}
+
+
+def mla_prefill_chunk_paged(p, x, start, limit, cfg, kv, block_table, *,
+                            block_size: int):
+    """One chunk of chunked prefill against the paged latent pool.
+
+    Mirrors :func:`repro.models.attention.attn_prefill_paged`: the chunk's
+    latents are written to the request's pages (padding rows at positions
+    >= ``limit`` go to the null block), then the chunk queries attend the
+    gathered table in decompressed form — the same flash kernel and scale
+    the dense prefill uses.
+    """
+    m = cfg.mla
+    _, C, _ = x.shape
+    H = cfg.num_heads
+    positions = start + jnp.arange(C)[None, :]               # (1, C)
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, positions, cfg)
+    pos = positions[0]
+    valid = pos < limit
+    bidx = block_table[jnp.where(valid, pos // block_size, 0)]
+    bidx = jnp.where(valid, bidx, 0)                         # null block
+    off = jnp.where(valid, pos % block_size, 0)
+    ckv_pool = kv["ckv"].at[bidx, off].set(c_kv[0])
+    krope_pool = kv["krope"].at[bidx, off].set(k_rope[0])
+    W = block_table.shape[0]
+    S = W * block_size
+    ckv_seq = ckv_pool[block_table].reshape(1, S, m.kv_lora_rank)
+    krope_seq = krope_pool[block_table].reshape(1, S, m.qk_rope_head_dim)
+
+    k_nope = (ckv_seq @ p["w_uk"]).reshape(1, S, H, m.qk_nope_head_dim)
+    v = (ckv_seq @ p["w_uv"]).reshape(1, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_seq[:, :, None, :],
+                                  (1, S, H, m.qk_rope_head_dim))], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=start,
+                              scale=scale)
+    y = out.reshape(1, C, H * m.v_head_dim) @ p["wo"]
+    return y, {"ckv": ckv_pool, "krope": krope_pool}
+
+
 def mla_decode(p, x, pos, cfg, cache, *, window=None):
     """Absorbed-matmul decode: attention in the latent space.
 

@@ -15,49 +15,19 @@ Modes:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN, DENSE_FFN, LOCAL_ATTN, MLA, MOE_FFN, RGLRU, SSD
+from repro.configs.base import DENSE_FFN, MOE_FFN
 from repro.core.meshctx import constrain
-from repro.models import attention, mamba2 as m2, mla as mla_mod, moe as moe_mod, \
-    rglru as rg_mod
+from repro.models import mixers as MX, moe as moe_mod
 from repro.models.common import dense_init, dtype_of, embed_init, rms_norm, swiglu
-
-
-@dataclasses.dataclass(frozen=True)
-class Segment:
-    kinds: Tuple[Tuple[str, str], ...]   # (mixer, ffn) per sub-layer in the macro block
-    repeat: int
-
-
-def segments(cfg) -> Tuple[Segment, ...]:
-    kinds = cfg.block_kinds()
-    if cfg.family == "hybrid":
-        pat = len(cfg.rglru.block_pattern)
-        n_macro, tail = cfg.num_layers // pat, cfg.num_layers % pat
-        segs = [Segment(tuple(kinds[:pat]), n_macro)]
-        if tail:
-            segs.append(Segment(tuple(kinds[n_macro * pat:]), 1))
-        return tuple(segs)
-    # otherwise: group maximal runs of identical (mixer, ffn)
-    segs = []
-    run_kind, run_len = kinds[0], 0
-    for kd in kinds:
-        if kd == run_kind:
-            run_len += 1
-        else:
-            segs.append(Segment((run_kind,), run_len))
-            run_kind, run_len = kd, 1
-    segs.append(Segment((run_kind,), run_len))
-    return tuple(segs)
+from repro.models.mixers import Segment, segments  # noqa: F401  (re-export)
 
 
 # ---------------------------------------------------------------------------
-# per-sublayer init / forward / decode
+# per-sublayer init / forward / decode — mixer dispatch is one registry
+# lookup (repro.models.mixers); only the FFN legs live here.
 # ---------------------------------------------------------------------------
 def _init_sublayer(cfg, kind, key):
     mixer, ffn = kind
@@ -65,14 +35,8 @@ def _init_sublayer(cfg, kind, key):
     dt = dtype_of(cfg)
     ks = jax.random.split(key, 3)
     p: dict = {"norm1": jnp.zeros((d,), dt)}
-    if mixer in (ATTN, LOCAL_ATTN):
-        p["attn"] = attention.init_attention(cfg, ks[0])
-    elif mixer == MLA:
-        p["attn"] = mla_mod.init_mla(cfg, ks[0])
-    elif mixer == SSD:
-        p["mixer"] = m2.init_mamba2(cfg, ks[0])
-    elif mixer == RGLRU:
-        p["mixer"] = rg_mod.init_rglru(cfg, ks[0])
+    spec = MX.get_mixer(mixer)
+    p[spec.param_key] = spec.init(cfg, ks[0])
     if ffn == DENSE_FFN:
         p["norm2"] = jnp.zeros((d,), dt)
         p["ffn"] = {
@@ -86,12 +50,6 @@ def _init_sublayer(cfg, kind, key):
     return p
 
 
-def _resolve_window(cfg, mixer, window_override):
-    if mixer == LOCAL_ATTN:
-        return cfg.sliding_window
-    return window_override           # None => full attention
-
-
 def _zero_metrics():
     return {"moe_aux_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0)}
 
@@ -99,33 +57,11 @@ def _zero_metrics():
 def _sublayer_forward(p, x, positions, cfg, kind, *, mode, window_override,
                       moe_dispatch):
     mixer, ffn = kind
-    want_cache = mode == "prefill"
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
-    cache = None
-    w = _resolve_window(cfg, mixer, window_override)
-    if mixer in (ATTN, LOCAL_ATTN):
-        if want_cache:
-            y, cache = attention.attn_prefill(p["attn"], h, positions, cfg, window=w)
-        else:
-            y = attention.attn_forward(p["attn"], h, positions, cfg, window=w)
-    elif mixer == MLA:
-        if want_cache:
-            y, cache = mla_mod.mla_forward(p["attn"], h, positions, cfg,
-                                           window=w, return_cache=True)
-        else:
-            y = mla_mod.mla_forward(p["attn"], h, positions, cfg, window=w)
-    elif mixer == SSD:
-        if want_cache:
-            y, cache = m2.mamba2_forward(p["mixer"], h, cfg, return_cache=True)
-        else:
-            y = m2.mamba2_forward(p["mixer"], h, cfg)
-    elif mixer == RGLRU:
-        if want_cache:
-            y, cache = rg_mod.rglru_forward(p["mixer"], h, cfg, return_cache=True)
-        else:
-            y = rg_mod.rglru_forward(p["mixer"], h, cfg)
-    else:
-        raise ValueError(mixer)
+    spec = MX.get_mixer(mixer)
+    w = MX.resolve_window(cfg, mixer, window_override)
+    y, cache = spec.forward(p, h, positions, cfg, window=w,
+                            want_cache=mode == "prefill")
     x = x + y
 
     metrics = _zero_metrics()
@@ -145,17 +81,9 @@ def _sublayer_decode(p, x, pos, cfg, kind, cache, *, window_override,
                      moe_dispatch):
     mixer, ffn = kind
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
-    w = _resolve_window(cfg, mixer, window_override)
-    if mixer in (ATTN, LOCAL_ATTN):
-        y, cache = attention.attn_decode(p["attn"], h, pos, cfg, cache, window=w)
-    elif mixer == MLA:
-        y, cache = mla_mod.mla_decode(p["attn"], h, pos, cfg, cache, window=w)
-    elif mixer == SSD:
-        y, cache = m2.mamba2_decode(p["mixer"], h, cfg, cache)
-    elif mixer == RGLRU:
-        y, cache = rg_mod.rglru_decode(p["mixer"], h, cfg, cache)
-    else:
-        raise ValueError(mixer)
+    spec = MX.get_mixer(mixer)
+    w = MX.resolve_window(cfg, mixer, window_override)
+    y, cache = spec.decode(p, h, pos, cfg, cache, window=w)
     x = x + y
     if ffn == DENSE_FFN:
         h = rms_norm(x, p["norm2"], cfg.norm_eps)
@@ -169,17 +97,9 @@ def _sublayer_decode(p, x, pos, cfg, kind, cache, *, window_override,
 
 def _init_sublayer_cache(cfg, kind, batch, cache_len, dtype, window_override):
     mixer, _ = kind
-    w = _resolve_window(cfg, mixer, window_override)
+    w = MX.resolve_window(cfg, mixer, window_override)
     eff_len = min(cache_len, w) if w is not None else cache_len
-    if mixer in (ATTN, LOCAL_ATTN):
-        return attention.init_kv_cache(cfg, batch, eff_len, dtype)
-    if mixer == MLA:
-        return mla_mod.init_mla_cache(cfg, batch, eff_len, dtype)
-    if mixer == SSD:
-        return m2.init_mamba2_cache(cfg, batch, dtype)
-    if mixer == RGLRU:
-        return rg_mod.init_rglru_cache(cfg, batch, dtype)
-    raise ValueError(mixer)
+    return MX.get_mixer(mixer).init_cache(cfg, batch, eff_len, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -298,14 +218,18 @@ def _paged_ffn(p, x, cfg, ffn, moe_dispatch):
 
 
 def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
-                      *, block_size, moe_dispatch="gshard"):
+                      *, block_size, slot_mask=None, moe_dispatch="gshard"):
     """Continuous-batching decode: one token per slot at per-slot positions.
 
     tokens: (B, 1) int32; positions: (B,) int32 absolute write positions
     (slots advance independently — this is what ``decode_step``'s shared
-    scalar ``pos`` cannot express); kv_pools: :class:`PagedKVPool` pytree
-    with leaves (L, N_blocks, block, KV, hd); block_tables: (B, W) int32.
-    Returns (logits (B, 1, V_pad), new kv_pools).
+    scalar ``pos`` cannot express); kv_pools: :class:`StatePool` pytree —
+    paged leaves (L, N_blocks, block, ...) for attention/MLA sublayers,
+    per-slot dense leaves (L, B, ...) for SSD/RG-LRU sublayers;
+    block_tables: (B, W) int32; slot_mask: (B,) bool, True where the seat
+    holds a RUNNING request — inactive seats' dummy decode must not
+    advance slot-state recurrences (paged writes are naturally routed to
+    the null block).  Returns (logits (B, 1, V_pad), new pools).
     """
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, ("pod", "data"), None, None)
@@ -316,9 +240,11 @@ def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
             layer_params, layer_kv = xs
             new_kv = []
             for sub_p, kd, kv in zip(layer_params, _seg.kinds, layer_kv):
-                y, kv2 = attention.attn_decode_paged(
-                    sub_p["attn"], rms_norm(h, sub_p["norm1"], cfg.norm_eps),
-                    positions, cfg, kv, block_tables, block_size=block_size)
+                spec = MX.get_mixer(kd[0])
+                y, kv2 = spec.decode_paged(
+                    sub_p, rms_norm(h, sub_p["norm1"], cfg.norm_eps),
+                    positions, cfg, kv, block_tables, block_size=block_size,
+                    window=spec.window(cfg), slot_mask=slot_mask)
                 h = h + y
                 h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
                 new_kv.append(kv2)
@@ -335,20 +261,23 @@ def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
     return logits, new_pools
 
 
-def prefill_chunk_paged(params, tokens, start, limit, cfg, kv_pools,
+def prefill_chunk_paged(params, tokens, start, limit, slot, cfg, kv_pools,
                         block_table, *, block_size, moe_dispatch="gshard",
                         with_logits=True):
     """One chunked-prefill step for a single request (HyperServe).
 
     tokens: (1, C) — the chunk, first token at absolute position ``start``
     (traced scalar, so one compilation serves every chunk); ``limit`` is
-    the prompt's true length (padding rows never write real pages);
-    block_table: (W,) the request's table.  Writes the chunk's K/V into
-    the pool pages and returns (logits (1, C, V_pad), new kv_pools).
-    Only the prompt's final chunk needs logits (they seed the first
-    sampled token); ``with_logits=False`` skips the unembedding matmul —
-    the dominant per-chunk FLOP for real vocabularies — and returns the
-    final hidden states instead.
+    the prompt's true length (padding rows never write real pages, and
+    slot-state mixers freeze their recurrent state past it); ``slot``
+    (traced scalar) is the request's decode seat — SSD/RG-LRU sublayers
+    read and update that row of their per-slot state; block_table: (W,)
+    the request's table.  Writes the chunk's K/V into the pool pages and
+    returns (logits (1, C, V_pad), new kv_pools).  Only the prompt's
+    final chunk needs logits (they seed the first sampled token);
+    ``with_logits=False`` skips the unembedding matmul — the dominant
+    per-chunk FLOP for real vocabularies — and returns the final hidden
+    states instead.
     """
     x = jnp.take(params["embed"], tokens, axis=0)
 
@@ -358,10 +287,11 @@ def prefill_chunk_paged(params, tokens, start, limit, cfg, kv_pools,
             layer_params, layer_kv = xs
             new_kv = []
             for sub_p, kd, kv in zip(layer_params, _seg.kinds, layer_kv):
-                y, kv2 = attention.attn_prefill_paged(
-                    sub_p["attn"], rms_norm(h, sub_p["norm1"], cfg.norm_eps),
-                    start, limit, cfg, kv, block_table,
-                    block_size=block_size)
+                spec = MX.get_mixer(kd[0])
+                y, kv2 = spec.prefill_paged(
+                    sub_p, rms_norm(h, sub_p["norm1"], cfg.norm_eps),
+                    start, limit, slot, cfg, kv, block_table,
+                    block_size=block_size, window=spec.window(cfg))
                 h = h + y
                 h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
                 new_kv.append(kv2)

@@ -61,6 +61,38 @@ def init_rglru_cache(cfg, batch: int, dtype):
     }
 
 
+def rglru_prefill_chunk(p, x, start, limit, slot, cfg, cache):
+    """One chunked-prefill step over per-slot RG-LRU state (HyperServe).
+
+    x: (1, C, D), first token at absolute position ``start`` (traced);
+    rows at positions >= ``limit`` are padding — their recurrence gate is
+    zeroed, which makes ``a_t = exp(0) = 1`` and ``sqrt(1 - a_t^2) = 0``:
+    the state passes through untouched.  ``slot`` (traced) selects the
+    per-slot state row; the conv tail is sliced at ``limit`` so padding
+    inputs never leak into the next chunk.
+    """
+    _, C, _ = x.shape
+    st = jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb = x @ p["w_x"]
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([st["conv"].astype(xb.dtype), xb], axis=1)
+    conv_tail = jax.lax.dynamic_slice_in_dim(xp, limit - start, K - 1, axis=1)
+    xb, _ = causal_conv1d(xb, p["conv_w"], cache=st["conv"])
+    ig = jax.nn.sigmoid(xb @ p["w_input_gate"])
+    ag = jax.nn.sigmoid(xb @ p["w_a_gate"])
+    valid = (start + jnp.arange(C) < limit)[None, :, None]   # (1, C, 1)
+    ag = ag * valid
+    h, fin = ops.rglru_scan(xb, ig, ag, _log_a(p), init_state=st["state"])
+    y = (h * gate) @ p["w_out"]
+    new = {"state": fin, "conv": conv_tail}
+    cache = jax.tree.map(
+        lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+            a, r.astype(a.dtype), slot, axis=0), cache, new)
+    return y, cache
+
+
 def rglru_decode(p, x, cfg, cache):
     """One-token step.  x: (B, 1, D)."""
     B = x.shape[0]

@@ -32,7 +32,7 @@ class RequestRejected(RuntimeError):
 class HyperServe:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  prefill_group=None, decode_group=None, seed: int = 0,
-                 moe_dispatch: str = "gshard"):
+                 moe_dispatch=None):
         self.engine = ServeEngine(cfg, params, serve_cfg=serve_cfg, mesh=mesh,
                                   plan=plan, prefill_group=prefill_group,
                                   decode_group=decode_group, seed=seed,

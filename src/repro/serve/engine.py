@@ -21,6 +21,23 @@ from repro.core.meshctx import use_mesh
 from repro.models import model as M
 
 
+def resolve_moe_dispatch(cfg, moe_dispatch: Optional[str]) -> str:
+    """Serving default: dropless per-token dispatch for MoE configs.
+
+    The GShard capacity dispatch makes a token's output depend on which
+    other tokens share its dispatch group — under continuous batching the
+    group is whatever happens to be seated (including dummy seats), so
+    outputs would flicker with batch composition and can never match the
+    sequential baseline.  The sort-based ragged dispatch applies each
+    token's own top-k experts with no cross-token interaction, which is
+    what makes greedy serving deterministic; callers can still force a
+    specific dispatch.
+    """
+    if moe_dispatch is not None:
+        return moe_dispatch
+    return "ragged" if getattr(cfg, "moe", None) is not None else "gshard"
+
+
 def make_prefill_step(cfg, mesh: Optional[Mesh], plan, *, multimodal=False,
                       unroll=False, batch: Optional[int] = None,
                       seq_len: Optional[int] = None,
@@ -116,29 +133,23 @@ def _n(mesh, axes):
 # continuous-batching run.
 # ---------------------------------------------------------------------------
 def make_pool_shardings(mesh: Optional[Mesh], pool_tree, plan):
-    """NamedShardings for PagedKVPool leaves (L, N_blocks, block, KV, hd).
+    """NamedShardings for StatePool leaves (paged pools + per-slot state).
 
-    Blocks are shared by every request, so the pool replicates over the
-    data axes; the KV-head dim shards over the tensor axes when divisible
-    (``hypershard.cache_strategy`` semantics, pool edition).
+    The per-leaf derivation lives in :func:`repro.core.hypershard.
+    derive_pool`: paged pools replicate over data axes and shard KV heads
+    over tp when divisible; MLA latent pools replicate; per-slot dense
+    state shards its head/channel dim over tp when divisible.
     """
     if mesh is None:
         return None
     from repro.core.layout import layout_for_mesh
     layout = layout_for_mesh(mesh)
-    tp = tuple(a for a in (plan.tp or ()) if a in layout.alias_name)
-
-    def one(leaf):
-        shape = leaf.shape
-        entries = [None] * len(shape)
-        tp_n = 1
-        for a in tp:
-            tp_n *= layout.axis_size(a)
-        if tp and shape[3] % tp_n == 0:
-            entries[3] = tp if len(tp) > 1 else tp[0]
-        return NamedSharding(mesh, P(*entries))
-
-    return jax.tree.map(one, pool_tree)
+    paths, leaves, treedef = hypershard.tree_paths(pool_tree)
+    shardings = [
+        hypershard.derive_pool(p, tuple(l.shape), layout, plan)[0]
+        .named_sharding(mesh)
+        for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
 
 
 def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
@@ -148,16 +159,19 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
     """Continuous-batching decode step: one token for every seated slot.
 
     Returns ``step(params, tokens (B,1), positions (B,), pools, tables
-    (B,W)) -> (logits, new pools)`` with the pool donated (updated in
-    place on device).  The seat count B and table width W are fixed by
-    the arrays the caller passes (one compilation per distinct shape).
+    (B,W), slot_mask (B,)) -> (logits, new pools)`` with the pool donated
+    (updated in place on device).  ``slot_mask`` marks the seats holding
+    RUNNING requests: inactive seats' dummy decode must not advance
+    slot-state recurrences.  The seat count B and table width W are fixed
+    by the arrays the caller passes (one compilation per distinct shape).
     """
 
-    def step(params, tokens, positions, pools, tables):
+    def step(params, tokens, positions, pools, tables, slot_mask):
         ctx = use_mesh(mesh) if mesh is not None else _null()
         with ctx:
             return M.decode_step_paged(params, tokens, positions, cfg, pools,
                                        tables, block_size=block_size,
+                                       slot_mask=slot_mask,
                                        moe_dispatch=moe_dispatch)
 
     donate_kw = {"donate_argnums": (3,)} if donate else {}
@@ -171,7 +185,8 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
     tab_sh = NamedSharding(mesh, P(None, None))
     logits_sh = NamedSharding(mesh, P(None, None, "model"))
     jitted = jax.jit(step,
-                     in_shardings=(param_sh, tok_sh, rep, pool_sh, tab_sh),
+                     in_shardings=(param_sh, tok_sh, rep, pool_sh, tab_sh,
+                                   rep),
                      out_shardings=(logits_sh, pool_sh), **donate_kw)
     return jitted, {"params": param_sh, "pools": pool_sh}
 
@@ -181,21 +196,25 @@ def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
                             donate: bool = True, with_logits: bool = True,
                             moe_dispatch: str = "gshard"):
     """Chunked-prefill step for one request: ``(params, tokens (1,C),
-    start, limit, pools, table (W,)) -> (logits (1,C,V), new pools)``.
+    start, limit, slot, pools, table (W,)) -> (logits (1,C,V), new pools)``.
 
-    Build one ``with_logits=False`` variant for non-final chunks — their
-    logits are discarded, so they can skip the unembedding matmul.
+    ``slot`` (traced scalar) is the request's decode seat — slot-state
+    mixers (SSD/RG-LRU) carry their recurrence in that row of the pool's
+    per-slot leaves across chunks.  Build one ``with_logits=False``
+    variant for non-final chunks — their logits are discarded, so they
+    can skip the unembedding matmul.
     """
 
-    def step(params, tokens, start, limit, pools, table):
+    def step(params, tokens, start, limit, slot, pools, table):
         ctx = use_mesh(mesh) if mesh is not None else _null()
         with ctx:
-            return M.prefill_chunk_paged(params, tokens, start, limit, cfg,
-                                         pools, table, block_size=block_size,
+            return M.prefill_chunk_paged(params, tokens, start, limit, slot,
+                                         cfg, pools, table,
+                                         block_size=block_size,
                                          moe_dispatch=moe_dispatch,
                                          with_logits=with_logits)
 
-    donate_kw = {"donate_argnums": (4,)} if donate else {}
+    donate_kw = {"donate_argnums": (5,)} if donate else {}
     if mesh is None:
         return jax.jit(step, **donate_kw), {}
     pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
@@ -207,7 +226,7 @@ def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
     out0_sh = (NamedSharding(mesh, P(None, None, "model")) if with_logits
                else NamedSharding(mesh, P(None, None, None)))
     jitted = jax.jit(step,
-                     in_shardings=(param_sh, tok_sh, rep, rep, pool_sh,
+                     in_shardings=(param_sh, tok_sh, rep, rep, rep, pool_sh,
                                    tab_sh),
                      out_shardings=(out0_sh, pool_sh), **donate_kw)
     return jitted, {"params": param_sh, "pools": pool_sh}
@@ -232,11 +251,13 @@ class Generator:
     """Host-side prefill+decode driver."""
 
     def __init__(self, cfg, params, *, mesh=None, plan=None, max_len=512,
-                 window_override=None):
+                 window_override=None, moe_dispatch=None):
         self.cfg = cfg
         self.params = params
         plan = plan or hypershard.ShardingPlan()
-        self.prefill_fn, _ = make_prefill_step(cfg, mesh, plan)
+        self.moe_dispatch = resolve_moe_dispatch(cfg, moe_dispatch)
+        self.prefill_fn, _ = make_prefill_step(cfg, mesh, plan,
+                                               moe_dispatch=self.moe_dispatch)
         self.max_len = max_len
         self.window_override = window_override
         self._serve = {}
@@ -248,7 +269,7 @@ class Generator:
             self._serve[batch], _ = make_serve_step(
                 self.cfg, self.mesh, self.plan, batch=batch,
                 cache_len=self.max_len, window_override=self.window_override,
-                donate=False)
+                donate=False, moe_dispatch=self.moe_dispatch)
         return self._serve[batch]
 
     def generate(self, tokens, gen: GenerateConfig = GenerateConfig()):

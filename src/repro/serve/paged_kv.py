@@ -1,36 +1,43 @@
-"""Paged KV cache: fixed-size HBM blocks + block tables (HyperServe §3.2).
+"""Paged decode state: fixed-size HBM blocks + block tables (HyperServe §3.2).
 
 HBM is treated as a managed cache over the supernode's pooled DRAM
-(HyperOffload, arXiv 2602.00748): the KV state of every in-flight request
-lives in fixed-size **blocks** carved out of one pooled allocation, mapped
-through per-request **block tables**.  Three pieces:
+(HyperOffload, arXiv 2602.00748): the decode state of every in-flight
+request lives behind per-request **block tables** over fixed-size
+**blocks** carved out of one pooled allocation — or, for recurrent
+mixers, in O(1) dense **slot** rows.  Three pieces:
 
   - :class:`BlockManager` — pure host-side bookkeeping: a free list,
     per-block reference counts (copy-on-write prefix sharing), admission
     queries, and spill/restore of a request's pages into the shared
     :class:`~repro.core.kvcache.HostArchive` (the cold tier).
-  - :class:`PagedKVPool` — the device arrays themselves, one ``{k, v}``
-    leaf pair per attention segment shaped ``(L, N_blocks, block, KV, hd)``,
-    plus the host-driven page extract/insert used by spill and restore.
+  - :class:`StatePool` — the device arrays themselves, one leaf dict per
+    (segment, sublayer) whose layout the mixer registry declares
+    (:func:`repro.models.mixers.model_state_layout`): **paged** leaves
+    ``(L, N_blocks, block, ...)`` indexed through block tables (full
+    attention K/V, MLA latents, sliding-window attention), and **slot**
+    leaves ``(L, num_slots, ...)`` holding per-request dense recurrent
+    state (SSD, RG-LRU) seated in fixed decode seats.  Host-driven page
+    extract/insert serves spill/restore; slot extract/insert/zero serves
+    seating and eviction.
   - :func:`blocks_for` — tokens -> blocks arithmetic.
 
 Block id 0 is the **null block**: never allocated, the write target for
-inactive batch slots and the padding entry of every block table.  Reads
-through it are always masked by the decode length, so its contents are
-don't-care.
+inactive batch slots, the padding entry of every block table, and the
+repoint target for sliding-window blocks freed out of the window.  Reads
+through it are always masked (by decode length or window), so its
+contents are don't-care.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN, LOCAL_ATTN
 from repro.core.kvcache import HostArchive
-from repro.models import model as M
+from repro.models import mixers as MX
 
 
 class NoFreeBlocks(RuntimeError):
@@ -152,7 +159,11 @@ class BlockManager:
         archive entry intact) when the pool can't fit them yet.
         """
         pages = self.archive.fetch(key, pop=False)
-        n = jax.tree.leaves(pages)[0].shape[1]
+        leaves = jax.tree.leaves(pages)
+        # pure-slot models (e.g. SSD-only) have no paged leaves: their
+        # "pages" archive entry is structurally empty and restore allocates
+        # nothing — the table regrows lazily as decode extends it
+        n = leaves[0].shape[1] if leaves else 0
         bids = self.alloc(n)                     # may raise NoFreeBlocks
         self.archive.discard(key)
         insert_pages(pages, bids)
@@ -162,78 +173,137 @@ class BlockManager:
         return key in self.archive
 
 
-def _attn_segments(cfg) -> List[Tuple[str, int, Tuple[str, ...]]]:
-    """(seg name, repeat, mixer kinds) — validates the paged-serve support."""
-    out = []
-    for si, seg in enumerate(M.segments(cfg)):
-        mixers = tuple(kd[0] for kd in seg.kinds)
-        for mx in mixers:
-            if mx == LOCAL_ATTN:
-                raise ValueError(
-                    f"paged KV serving does not yet apply sliding windows; "
-                    f"{cfg.name} segment {si} has {mx!r} (serving it "
-                    f"unwindowed would silently diverge from the dense "
-                    f"decode path — see ROADMAP open items)")
-            if mx != ATTN:
-                raise ValueError(
-                    f"paged KV serving supports attention mixers only; "
-                    f"{cfg.name} segment {si} has {mx!r} (SSM/RG-LRU/MLA "
-                    f"decode state is O(1) per request and does not page)")
-        out.append((f"seg{si}", seg.repeat, mixers))
-    return out
-
-
-class PagedKVPool:
-    """The pooled HBM KV arrays for every attention layer of one model.
+class StatePool:
+    """The pooled HBM decode-state arrays for every layer of one model.
 
     The pytree mirrors the model's decode-cache structure — per segment a
-    tuple of per-sublayer ``{"k", "v"}`` dicts — but every leaf is shaped
-    ``(L, N_blocks, block, KV, hd)``: the per-request sequence dim is
-    replaced by the shared (block, offset) pool that block tables index.
-    The leading stacked-layer axis is what the model's ``lax.scan`` slices.
+    tuple of per-sublayer leaf dicts — with the per-sublayer layout
+    declared by the mixer registry:
+
+      - **paged** sublayers (ATTN, MLA, LOCAL_ATTN): leaves
+        ``(L, N_blocks, block, ...)`` — the per-request sequence dim is
+        replaced by the shared (block, offset) pool that block tables
+        index;
+      - **slot** sublayers (SSD, RG-LRU): leaves ``(L, num_slots, ...)``
+        — O(1) dense recurrent state, one row per decode seat.
+
+    The leading stacked-layer axis is what the model's ``lax.scan``
+    slices.  Construction resolves the config against the registry
+    (:func:`repro.models.mixers.model_state_layout`) — an unregistered
+    mixer kind raises a typed ``ServePlanError`` here, before any jit.
     """
 
-    def __init__(self, cfg, pcfg: PagedKVConfig, *,
+    def __init__(self, cfg, pcfg: PagedKVConfig, *, num_slots: int = 1,
                  dtype=None, shardings=None):
         self.cfg = cfg
         self.pcfg = pcfg
-        kv_heads, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self.num_slots = num_slots
+        self.layout = MX.model_state_layout(cfg)
         dt = dtype or jnp.dtype(pcfg.dtype)
-        self.kv: Dict[str, tuple] = {}
-        for name, repeat, mixers in _attn_segments(cfg):
-            shape = (repeat, pcfg.num_blocks, pcfg.block_size, kv_heads, hd)
-            self.kv[name] = tuple(
-                {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
-                for _ in mixers)
+        self.state: dict = {}
+        for seg in self.layout.segments:
+            subs = []
+            for spec in seg.specs:
+                # shapes only — allocate each leaf ONCE, already stacked
+                one = jax.eval_shape(
+                    lambda spec=spec: spec.init_state(
+                        cfg, num_blocks=pcfg.num_blocks,
+                        block_size=pcfg.block_size,
+                        num_slots=num_slots, dtype=dt))
+                subs.append(jax.tree.map(
+                    lambda a: jnp.zeros((seg.repeat,) + a.shape, a.dtype),
+                    one))
+            self.state[seg.name] = tuple(subs)
         if shardings is not None:
-            self.kv = jax.tree.map(jax.device_put, self.kv, shardings)
+            self.state = jax.tree.map(jax.device_put, self.state, shardings)
+
+    # kept as an alias while callers migrate from the KV-only pool
+    @property
+    def kv(self):
+        return self.state
+
+    @kv.setter
+    def kv(self, value):
+        self.state = value
 
     def hbm_bytes(self) -> int:
         return sum(int(a.size) * a.dtype.itemsize
-                   for a in jax.tree.leaves(self.kv))
+                   for a in jax.tree.leaves(self.state))
+
+    # -- structural helpers ------------------------------------------------
+    # Every pool operation below targets one side of the paged/slot split;
+    # these two visitors are the single place the segment/sublayer walk
+    # (and the split itself) is encoded.
+    def _collect(self, want_slot: bool, fn):
+        """Structure-preserving gather: ``fn(sub)`` on matching sublayers,
+        ``{}`` placeholders elsewhere (so insert can realign)."""
+        out = {}
+        for seg in self.layout.segments:
+            out[seg.name] = tuple(
+                fn(self.state[seg.name][j])
+                if (spec.state == MX.SLOT) == want_slot else {}
+                for j, spec in enumerate(seg.specs))
+        return out
+
+    def _rewrite(self, want_slot: bool, fn) -> None:
+        """Rewrite matching sublayers in place: ``fn(sub, j, seg_name)``."""
+        new = {}
+        for seg in self.layout.segments:
+            subs = list(self.state[seg.name])
+            for j, spec in enumerate(seg.specs):
+                if (spec.state == MX.SLOT) == want_slot:
+                    subs[j] = fn(subs[j], j, seg.name)
+            new[seg.name] = tuple(subs)
+        self.state = new
 
     # -- host-driven page movement (spill / restore / CoW copy) ------------
     def extract_pages(self, bids: Sequence[int]):
-        """Gather blocks ``bids`` out of the pool: leaf (L, n, bs, KV, hd)."""
+        """Gather blocks ``bids`` out of every paged leaf: (L, n, bs, ...).
+
+        Slot sublayers contribute an empty dict (their state does not
+        page); the result keeps the segment/sublayer structure so
+        :meth:`insert_pages` can realign it.
+        """
         idx = jnp.asarray(list(bids), jnp.int32)
-        return jax.tree.map(lambda a: a[:, idx], self.kv)
+        return self._collect(False, lambda sub: jax.tree.map(
+            lambda a: a[:, idx], sub))
 
     def insert_pages(self, pages, bids: Sequence[int]) -> None:
         idx = jnp.asarray(list(bids), jnp.int32)
-        self.kv = jax.tree.map(
-            lambda a, p: a.at[:, idx].set(p.astype(a.dtype)), self.kv, pages)
+        self._rewrite(False, lambda sub, j, name: jax.tree.map(
+            lambda a, p: a.at[:, idx].set(p.astype(a.dtype)),
+            sub, pages[name][j]))
 
     def copy_page(self, src: int, dst: int) -> None:
-        self.kv = jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), self.kv)
+        self._rewrite(False, lambda sub, j, name: jax.tree.map(
+            lambda a: a.at[:, dst].set(a[:, src]), sub))
+
+    # -- per-slot dense state (seating / eviction) -------------------------
+    def extract_slot(self, slot: int):
+        """Pull one decode seat's dense state rows: leaf (L, 1, ...)."""
+        return self._collect(True, lambda sub: jax.tree.map(
+            lambda a: a[:, slot:slot + 1], sub))
+
+    def insert_slot(self, slot: int, values) -> None:
+        self._rewrite(True, lambda sub, j, name: jax.tree.map(
+            lambda a, v: a.at[:, slot:slot + 1].set(v.astype(a.dtype)),
+            sub, values[name][j]))
+
+    def zero_slot(self, slot: int) -> None:
+        """Reset one seat's dense state (a newly admitted request must not
+        inherit the previous occupant's recurrence)."""
+        self._rewrite(True, lambda sub, j, name: jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])), sub))
 
     def seat_prefill_caches(self, pcaches, bids: Sequence[int],
                             seq_len: int, row: int = 0) -> None:
         """Scatter a dense prefill cache (one request) into pages.
 
         ``pcaches`` is the ``M.forward(..., mode="prefill")`` cache pytree
-        with leaves (L, B, S, KV, hd); ``row`` selects the request within
-        it.  Used by the disaggregated path, where a prefill worker
-        produces the dense cache and hands it to the decode worker's pool.
+        with leaves (L, B, S, ...); ``row`` selects the request within it.
+        Used by the disaggregated path, where a prefill worker produces
+        the dense cache and hands it to the decode worker's pool — only
+        sound for pure-paged layouts (the runtime guards this).
         """
         bs = self.pcfg.block_size
         n = blocks_for(seq_len, bs)
@@ -242,10 +312,16 @@ class PagedKVPool:
         pad = n * bs - seq_len
 
         def seat(pool, pc):
-            src = pc[:, row, :seq_len]                         # (L, S, KV, hd)
+            src = pc[:, row, :seq_len]                         # (L, S, ...)
             if pad:
-                src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                src = jnp.pad(src, ((0, 0), (0, pad))
+                              + ((0, 0),) * (src.ndim - 2))
             src = src.reshape(src.shape[0], n, bs, *src.shape[2:])
             return pool.at[:, idx].set(src.astype(pool.dtype))
 
-        self.kv = jax.tree.map(seat, self.kv, pcaches)
+        self._rewrite(False, lambda sub, j, name: jax.tree.map(
+            seat, sub, pcaches[name][j]))
+
+
+# serving callers migrated to StatePool; the old name remains importable
+PagedKVPool = StatePool

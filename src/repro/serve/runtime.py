@@ -37,7 +37,7 @@ import numpy as np
 from repro.core import hypershard, mpmd
 from repro.core.kvcache import HostArchive
 from repro.serve import engine as E
-from repro.serve.paged_kv import BlockManager, PagedKVPool
+from repro.serve.paged_kv import BlockManager, StatePool
 from repro.serve.scheduler import ContinuousScheduler, Request, RequestState
 
 
@@ -78,7 +78,7 @@ class ServeEngine:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  prefill_group: Optional[mpmd.ProcessGroup] = None,
                  decode_group: Optional[mpmd.ProcessGroup] = None,
-                 moe_dispatch: str = "gshard", seed: int = 0):
+                 moe_dispatch: Optional[str] = None, seed: int = 0):
         from repro.configs.base import ServeConfig
         self.cfg = cfg
         if (prefill_group is None) != (decode_group is None):
@@ -90,34 +90,46 @@ class ServeEngine:
         self.plan, plan_scfg = _resolve_serve_plan(plan, self.mesh)
         self.scfg = serve_cfg or plan_scfg or ServeConfig()
         scfg = self.scfg
-        self.moe_dispatch = moe_dispatch
+        # None -> dropless ragged dispatch for MoE configs (exact greedy
+        # serving needs per-token-independent expert application)
+        self.moe_dispatch = moe_dispatch = E.resolve_moe_dispatch(
+            cfg, moe_dispatch)
 
         self.pcfg = scfg.paged_config(model_dtype=cfg.dtype)
-        self.pool = PagedKVPool(cfg, self.pcfg)
-        pool_sh = E.make_pool_shardings(self.mesh, self.pool.kv, self.plan)
+        # resolves cfg against the mixer registry; typed ServePlanError for
+        # unservable stacks (unregistered mixer kinds)
+        self.pool = StatePool(cfg, self.pcfg, num_slots=scfg.max_slots)
+        self.layout = self.pool.layout
+        if prefill_group is not None:
+            from repro.models import mixers as MX
+            MX.check_disagg_supported(cfg, self.layout)
+        pool_sh = E.make_pool_shardings(self.mesh, self.pool.state, self.plan)
         if pool_sh is not None:
-            self.pool.kv = jax.tree.map(jax.device_put, self.pool.kv, pool_sh)
+            self.pool.state = jax.tree.map(jax.device_put, self.pool.state,
+                                           pool_sh)
         self.blocks = BlockManager(self.pcfg, HostArchive(self.mesh))
         self.scheduler = ContinuousScheduler(
             scfg.scheduler_config(), self.blocks, scfg.block_size,
             scfg.max_blocks_per_req,
             spill=self._spill, restore=self._restore, reclaim=self._reclaim,
-            prefix=self._prefix_lookup, retain=self._retain)
+            prefix=self._prefix_lookup, retain=self._retain,
+            free_window=self.layout.free_window,
+            needs_pages=self.layout.has_paged_state)
 
         # jit'd units ------------------------------------------------------
         self._decode_step, _ = E.make_paged_serve_step(
             cfg, self.mesh, self.plan, block_size=scfg.block_size,
-            pool_tree=self.pool.kv, donate=True, moe_dispatch=moe_dispatch)
+            pool_tree=self.pool.state, donate=True, moe_dispatch=moe_dispatch)
         if prefill_group is None:
             self._prefill_step, _ = E.make_paged_prefill_step(
                 cfg, self.mesh, self.plan, block_size=scfg.block_size,
-                pool_tree=self.pool.kv, donate=True,
+                pool_tree=self.pool.state, donate=True,
                 moe_dispatch=moe_dispatch)
             # non-final chunks discard their logits; this variant skips the
             # unembedding matmul (compiles lazily on first multi-chunk prompt)
             self._prefill_step_mid, _ = E.make_paged_prefill_step(
                 cfg, self.mesh, self.plan, block_size=scfg.block_size,
-                pool_tree=self.pool.kv, donate=True, with_logits=False,
+                pool_tree=self.pool.state, donate=True, with_logits=False,
                 moe_dispatch=moe_dispatch)
             self.params = params
             if self.mesh is not None:
@@ -153,10 +165,24 @@ class ServeEngine:
     # tier-movement callbacks (scheduler-driven)
     # ------------------------------------------------------------------
     def _spill(self, req: Request) -> None:
+        """Archive a preempted request's pages AND its dense slot rows."""
+        if self.layout.has_slot_state:
+            self.blocks.archive.put(req.slot_archive_key,
+                                    self.pool.extract_slot(req.slot))
         self.blocks.spill(req.archive_key, req.table, self.pool.extract_pages)
 
     def _restore(self, req: Request) -> List[int]:
-        return self.blocks.restore(req.archive_key, self.pool.insert_pages)
+        bids = self.blocks.restore(req.archive_key, self.pool.insert_pages)
+        # the scheduler seats req.slot before invoking this callback, so
+        # the dense slot rows re-seat HERE — atomically with the pages.
+        # (Seating later, in step(), loses a same-cycle re-preemption
+        # race: _spill would archive the seat's stale rows.)
+        if self.layout.has_slot_state:
+            self.pool.insert_slot(req.slot,
+                                  self.blocks.archive.fetch(
+                                      req.slot_archive_key))
+        # window-freed entries were a table prefix; rebuild alignment
+        return [BlockManager.NULL] * req.null_prefix + bids
 
     def _reclaim(self, n: int) -> int:
         """Evict LRU prefix-cache entries until >= n blocks are freed."""
@@ -170,8 +196,14 @@ class ServeEngine:
 
     def _prefix_lookup(self, req: Request) -> List[int]:
         # disagg mode seats the whole dense prefill cache into the table,
-        # which would write through CoW-shared blocks — no sharing there
-        if not self.scfg.enable_prefix_cache or self.prefill_group is not None:
+        # which would write through CoW-shared blocks — no sharing there.
+        # Prefix forks are only sound for pure-paged layouts: slot-state
+        # mixers would resume with no recurrent state for the shared
+        # prefix, and windowed layouts may already have freed prompt
+        # blocks out of the retaining request's window.
+        if (not self.scfg.enable_prefix_cache
+                or self.prefill_group is not None
+                or not self.layout.pure_paged):
             return []
         bs = self.pcfg.block_size
         # at least one prompt token must remain to prefill (its logits seed
@@ -184,7 +216,7 @@ class ServeEngine:
         return []
 
     def _retain(self, req: Request) -> None:
-        if not self.scfg.enable_prefix_cache:
+        if not self.scfg.enable_prefix_cache or not self.layout.pure_paged:
             return
         bs = self.pcfg.block_size
         # retain every full-block prefix: a future prompt can only fork a
@@ -231,9 +263,9 @@ class ServeEngine:
         toks = np.zeros((1, bs_chunk), np.int32)
         toks[0, :n] = req.prompt[c0:c0 + n]
         step_fn = self._prefill_step if is_final else self._prefill_step_mid
-        logits, self.pool.kv = step_fn(
+        logits, self.pool.state = step_fn(
             self.params, jnp.asarray(toks), jnp.int32(c0),
-            jnp.int32(req.prompt_len), self.pool.kv,
+            jnp.int32(req.prompt_len), jnp.int32(req.slot), self.pool.state,
             jnp.asarray(self._padded_table(req)))
         self.scheduler.on_prefill_chunk(req, n)
         if is_final:
@@ -275,6 +307,12 @@ class ServeEngine:
     def step(self) -> List[Tuple[int, int]]:
         """One scheduler+compute iteration.  Returns [(rid, new token)]."""
         plan = self.scheduler.schedule()
+        if self.layout.has_slot_state:
+            # fresh admissions must not inherit the previous occupant's
+            # recurrence (resumed requests were re-seated inside _restore,
+            # atomically with their pages)
+            for req in plan.admitted:
+                self.pool.zero_slot(req.slot)
         events: List[Tuple[int, int]] = []
         for req in plan.prefill:
             self._run_prefill_chunk(req)
@@ -289,13 +327,16 @@ class ServeEngine:
             tokens = np.zeros((B, 1), np.int32)
             positions = np.zeros((B,), np.int32)
             tables = np.zeros((B, W), np.int32)
+            slot_mask = np.zeros((B,), bool)
             for r in runners:
                 tokens[r.slot, 0] = r.generated[-1]
                 positions[r.slot] = r.total_len - 1
                 tables[r.slot, :len(r.table)] = r.table
-            logits, self.pool.kv = self._decode_step(
+                slot_mask[r.slot] = True
+            logits, self.pool.state = self._decode_step(
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                self.pool.kv, jnp.asarray(tables))
+                self.pool.state, jnp.asarray(tables),
+                jnp.asarray(slot_mask))
             if all(r.temperature <= 0 for r in runners):
                 # batched greedy: one device op + one transfer for the whole
                 # batch instead of a sync per seated slot

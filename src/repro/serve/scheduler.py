@@ -18,6 +18,15 @@ each engine iteration
      the queue at the front, resuming later via page restore, never by
      recomputation.
 
+Sliding-window models (``free_window``, from the mixer registry's
+windowed StateSpec): blocks that fall wholly below every future query's
+window are freed back to the pool after each prefill chunk / decode
+token, their table entries repointed at the null block — once decoding,
+a request holds at most ``ceil(window/block) + 1`` live blocks.  Freed
+entries are always a *prefix* of the table (the window only moves
+forward), which is what lets spill/restore keep table indices aligned
+(``Request.null_prefix``).
+
 The scheduler owns no device arrays: page movement is delegated to
 callbacks the runtime injects (``spill``/``restore`` move pages across
 memory tiers, ``reclaim`` evicts prefix-cache blocks under pressure,
@@ -26,7 +35,8 @@ finished prompts enter the prefix cache before their refs drop).  This
 keeps the module unit-testable without touching JAX.
 
 Archive-key convention shared with the runtime: request ``rid`` spills
-under ``("req", rid)``.
+its pages under ``("req", rid)`` and — for models with per-slot dense
+recurrent state — its slot rows under ``("slotstate", rid)``.
 """
 from __future__ import annotations
 
@@ -65,6 +75,7 @@ class Request:
     slot: int = -1
     shared_blocks: int = 0                    # CoW prefix-cache blocks reused
     spilled_blocks: int = 0                   # pages parked in the cold tier
+    null_prefix: int = 0                      # leading window-freed table slots
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
 
@@ -84,6 +95,14 @@ class Request:
     @property
     def archive_key(self):
         return ("req", self.rid)
+
+    @property
+    def slot_archive_key(self):
+        return ("slotstate", self.rid)
+
+    @property
+    def live_blocks(self) -> int:
+        return sum(1 for b in self.table if b)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,11 +132,22 @@ class ContinuousScheduler:
                  reclaim: Callable[[int], int] = lambda n: 0,
                  prefix: Callable[[Request], List[int]] = lambda r: [],
                  retain: Callable[[Request], None] = lambda r: None,
+                 free_window: Optional[int] = None,
+                 needs_pages: bool = True,
                  clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.blocks = blocks
         self.block_size = block_size
         self.max_blocks_per_req = max_blocks_per_req
+        # sliding-window block freeing: sound only when EVERY paged layer
+        # of the model is windowed (the runtime derives this from the
+        # mixer registry's ModelStateLayout and passes the widest window)
+        self.free_window = free_window
+        # pure-slot models (SSD/RG-LRU only) keep O(1) dense state and no
+        # pages at all: admission is bounded by seats and the queue, never
+        # by phantom block pressure, and context length is not capped by
+        # the block-table width
+        self.needs_pages = needs_pages
         self._spill = spill
         self._restore = restore
         self._reclaim = reclaim
@@ -141,9 +171,10 @@ class ContinuousScheduler:
                       arrival=self._clock() if arrival is None else arrival)
         self.requests[req.rid] = req
         need = blocks_for(req.prompt_len + max_new_tokens, self.block_size)
-        if (not req.prompt or max_new_tokens < 1
-                or need > self.max_blocks_per_req
-                or need + self.cfg.watermark_blocks > self.blocks.num_total
+        cannot_fit = self.needs_pages and (
+            need > self.max_blocks_per_req
+            or need + self.cfg.watermark_blocks > self.blocks.num_total)
+        if (not req.prompt or max_new_tokens < 1 or cannot_fit
                 or len(self.queue) >= self.cfg.max_queue):
             req.state = RequestState.REJECTED     # can never (or won't) fit
             self.counters["rejected"] += 1
@@ -166,6 +197,7 @@ class ContinuousScheduler:
             req.table = []
         if req.state == RequestState.PREEMPTED:
             self.blocks.archive.discard(req.archive_key)
+            self.blocks.archive.discard(req.slot_archive_key)
         req.state = RequestState.CANCELLED
         req.t_finish = self._clock()
         return True
@@ -193,13 +225,19 @@ class ContinuousScheduler:
                 if not self._ensure_free(req.spilled_blocks
                                          + self.cfg.watermark_blocks):
                     break                       # strict FCFS: don't skip ahead
+                # seat BEFORE restoring: the restore callback re-seats the
+                # request's dense slot-state rows into req.slot, and a
+                # same-cycle re-preemption must spill those seated rows —
+                # not whatever the seat held before
+                req.slot = self._free_slots.pop()
                 try:
                     req.table = self._restore(req)
                 except NoFreeBlocks:
+                    self._free_slots.append(req.slot)
+                    req.slot = -1
                     break
                 req.spilled_blocks = 0
                 self.queue.popleft()
-                req.slot = self._free_slots.pop()
                 req.state = RequestState.RUNNING
                 self.active.append(req)
                 plan.resumed.append(req)
@@ -211,8 +249,8 @@ class ContinuousScheduler:
                     req.shared_blocks = len(shared)
                     req.prefill_done = len(shared) * self.block_size
                     self.counters["prefix_hits"] += 1
-            need = blocks_for(req.prompt_len, self.block_size) \
-                - req.shared_blocks
+            need = (blocks_for(req.prompt_len, self.block_size)
+                    - req.shared_blocks) if self.needs_pages else 0
             if not self._ensure_free(need + self.cfg.watermark_blocks):
                 break                           # strict FCFS admission
             self.queue.popleft()
@@ -238,7 +276,10 @@ class ContinuousScheduler:
             if req.state is not RequestState.RUNNING:
                 continue                        # preempted as a victim below
             # the step writes generated[-1]'s KV at position total_len - 1
-            need = blocks_for(req.total_len, self.block_size)
+            # (pure-slot models write no pages: need stays 0, no extension,
+            # no pool pressure, no preemption)
+            need = (blocks_for(req.total_len, self.block_size)
+                    if self.needs_pages else 0)
             while req is not None and len(req.table) < need:
                 if self._ensure_free(1):
                     req.table.extend(self.blocks.alloc(1))
@@ -263,7 +304,10 @@ class ContinuousScheduler:
         return max(candidates, key=lambda r: (r.arrival, r.rid))
 
     def _preempt(self, req: Request, plan: StepPlan) -> None:
-        req.spilled_blocks = len([b for b in req.table if b])
+        req.spilled_blocks = req.live_blocks
+        # window-freed entries are always a table *prefix*; remember how
+        # many so restore can rebuild the table with indices aligned
+        req.null_prefix = len(req.table) - req.spilled_blocks
         self._spill(req)                        # pages -> host archive + free
         req.table = []
         self._release(req, free_blocks=False)   # spill already freed them
@@ -282,10 +326,33 @@ class ContinuousScheduler:
         if req in self.active:
             self.active.remove(req)
 
+    # -- sliding-window block freeing --------------------------------------
+    def _window_free(self, req: Request, next_query_pos: int) -> None:
+        """Free blocks wholly below every future query's window.
+
+        ``next_query_pos`` is the lowest position any future query of this
+        request can occupy; keys below ``next_query_pos + 1 - window`` are
+        permanently masked, so their blocks (always a table prefix — the
+        window only moves forward) return to the pool and the table
+        entries repoint at the null block.
+        """
+        if self.free_window is None:
+            return
+        cutoff = next_query_pos + 1 - self.free_window
+        if cutoff <= 0:
+            return
+        nb = min(cutoff // self.block_size, len(req.table))
+        for j in range(nb):
+            b = req.table[j]
+            if b:
+                self.blocks.free([b])
+                req.table[j] = BlockManager.NULL
+
     # -- completion callbacks (invoked by the runtime) ---------------------
     def on_prefill_chunk(self, req: Request, n_tokens: int) -> None:
         req.prefill_done += n_tokens
         assert req.prefill_done <= req.prompt_len
+        self._window_free(req, req.prefill_done)
 
     def on_prompt_complete(self, req: Request, first_token: int) -> None:
         req.state = RequestState.RUNNING
@@ -297,6 +364,9 @@ class ContinuousScheduler:
         req.generated.append(token)
         if req.t_first_token is None:
             req.t_first_token = self._clock()
+        # the next decode step writes + queries at position total_len - 1
+        if req.state is RequestState.RUNNING:
+            self._window_free(req, req.total_len - 1)
         self._maybe_finish(req)
 
     def _maybe_finish(self, req: Request) -> None:

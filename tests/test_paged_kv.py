@@ -136,10 +136,56 @@ def test_restore_without_space_keeps_archive():
     assert m.spilled(("req", 1))                # entry still intact
 
 
-def test_paged_pool_rejects_non_attention_archs():
-    cfg = get_config("mamba2-370m").reduced()
-    with pytest.raises(ValueError, match="attention mixers only"):
-        PagedKVPool(cfg, PagedKVConfig())
+def test_state_pool_layouts_per_family():
+    """The mixer registry resolves every family to its state layout."""
+    from repro.models import mixers as MX
+    from repro.serve.paged_kv import StatePool
+
+    # pure-slot: SSD keeps O(1) recurrent state, no paged leaves at all
+    ssm = get_config("mamba2-370m").reduced()
+    pool = StatePool(ssm, PagedKVConfig(), num_slots=3)
+    assert pool.layout.has_slot_state and not pool.layout.has_paged_state
+    assert pool.layout.free_window is None and not pool.layout.pure_paged
+    leaves = jax.tree.leaves(pool.state)
+    assert leaves and all(a.shape[1] == 3 for a in leaves)   # (L, slots, ...)
+
+    # hybrid: RG-LRU slot state + windowed local attention
+    hyb = dataclasses.replace(get_config("recurrentgemma-2b").reduced(),
+                              num_layers=3)
+    layout = MX.model_state_layout(hyb)
+    assert layout.has_slot_state and layout.has_paged_state
+    assert layout.free_window == hyb.sliding_window
+
+    # MLA: paged latents, disagg-capable
+    mla = get_config("deepseek-v2-lite-16b").reduced()
+    layout = MX.model_state_layout(mla)
+    assert layout.pure_paged and not layout.has_slot_state
+
+    # full + windowed attention mix: windowed freeing is unsound (full-attn
+    # layers need every page) AND the dense-prefill disagg handoff is
+    # unsound (ring-layout LOCAL_ATTN prefill cache) -> neither free_window
+    # nor pure_paged
+    mix = dataclasses.replace(
+        hyb, rglru=dataclasses.replace(hyb.rglru,
+                                       block_pattern=("attn", "local",
+                                                      "attn")))
+    layout = MX.model_state_layout(mix)
+    assert layout.has_windowed_state and not layout.has_slot_state
+    assert layout.free_window is None and not layout.pure_paged
+
+
+def test_unregistered_mixer_is_typed_serve_error():
+    """An unknown mixer kind is a ServePlanError naming mixer and rule."""
+    from repro.api.errors import ServePlanError
+    from repro.models import mixers as MX
+
+    cfg = get_config("recurrentgemma-2b").reduced()
+    bogus = dataclasses.replace(
+        cfg, num_layers=3,
+        rglru=dataclasses.replace(cfg.rglru,
+                                  block_pattern=("rglru", "bogus", "local")))
+    with pytest.raises(ServePlanError, match="bogus.*StateSpec"):
+        MX.model_state_layout(bogus)
 
 
 def test_pool_hbm_accounting():
@@ -151,3 +197,102 @@ def test_pool_hbm_accounting():
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     want = cfg.num_layers * 2 * 16 * 4 * kv * hd * 4
     assert pool.hbm_bytes() == want
+
+
+# ---------------------------------------------------------------------------
+# BlockManager invariants under random op sequences (mini-hypothesis)
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=40)
+@given(st.data())
+def test_block_manager_invariants_random_ops(data):
+    """Free-list conservation, refcounts, CoW and window-freeing semantics
+    hold under arbitrary interleavings of alloc / free / fork / CoW-write /
+    spill / restore / window-free."""
+    num_blocks = data.draw(st.integers(4, 24), label="num_blocks")
+    m = _mgr(num_blocks=num_blocks)
+    tables = []                                  # live tables (lists of bids)
+    spilled = {}                                 # key -> expected page count
+
+    def check():
+        # conservation: every non-null block is free XOR refcounted
+        held = sum(1 for b in range(1, num_blocks) if m.refcount(b) > 0)
+        assert m.num_free + held == m.num_total
+        assert all(m.refcount(b) >= 0 for b in range(num_blocks))
+        assert m.refcount(0) == 1                # null block pinned forever
+        # every table entry is null or allocated
+        for t in tables:
+            for b in t:
+                assert b == 0 or m.refcount(b) >= 1
+
+    for _ in range(data.draw(st.integers(5, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["alloc", "free", "fork", "cow_write", "spill", "restore",
+             "window_free"]), label="op")
+        if op == "alloc":
+            n = data.draw(st.integers(1, 4))
+            if m.can_alloc(n):
+                tables.append(m.alloc(n))
+            else:
+                with pytest.raises(NoFreeBlocks):
+                    m.alloc(n)
+        elif op == "free" and tables:
+            t = tables.pop(data.draw(st.integers(0, len(tables) - 1)))
+            m.free([b for b in t if b])
+        elif op == "fork" and tables:
+            t = tables[data.draw(st.integers(0, len(tables) - 1))]
+            tables.append(m.fork(t))
+        elif op == "cow_write" and tables:
+            ti = data.draw(st.integers(0, len(tables) - 1))
+            t = tables[ti]
+            live = [i for i, b in enumerate(t) if b]
+            if live:
+                idx = data.draw(st.sampled_from(live))
+                was = t[idx]
+                if m.can_alloc(1) or not m.is_shared(was):
+                    copies = []
+                    new_t, wb = m.ensure_writable(
+                        list(t), idx, lambda s, d: copies.append((s, d)))
+                    tables[ti] = new_t
+                    assert m.refcount(wb) >= 1
+                    if was != wb:                # fault: copied + repointed
+                        assert copies == [(was, wb)]
+                        assert not m.is_shared(wb)
+        elif op == "spill" and tables:
+            t = tables.pop(data.draw(st.integers(0, len(tables) - 1)))
+            # spilling a CoW-shared page would strand the other owner's
+            # refcount; the runtime only spills exclusively-owned tables
+            if any(m.is_shared(b) for b in t):
+                m.free([b for b in t if b])
+            else:
+                key = ("req", len(spilled))
+                m.spill(key, t, lambda bids: {"pages": jnp.zeros(
+                    (1, len(bids), 2))})
+                spilled[key] = len([b for b in t if b])
+        elif op == "restore" and spilled:
+            key = next(iter(spilled))
+            n = spilled[key]
+            if m.can_alloc(n):
+                got = m.restore(key, lambda pages, bids: None)
+                assert len(got) == n
+                del spilled[key]
+                tables.append(got)
+            else:
+                with pytest.raises(NoFreeBlocks):
+                    m.restore(key, lambda pages, bids: None)
+                assert m.spilled(key)            # archive entry intact
+        elif op == "window_free" and tables:
+            # free a prefix, as the scheduler's window freeing does
+            ti = data.draw(st.integers(0, len(tables) - 1))
+            t = tables[ti]
+            k = data.draw(st.integers(0, len(t)))
+            for i in range(k):
+                if t[i]:
+                    m.free([t[i]])
+                    t[i] = 0
+            # freeing never touches blocks past the prefix
+            for b in t[k:]:
+                assert b == 0 or m.refcount(b) >= 1
+        check()

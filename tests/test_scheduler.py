@@ -184,3 +184,115 @@ def test_stats_shape():
     for key in ("queued", "running", "prefilling", "finished",
                 "block_occupancy", "free_blocks", "preemptions"):
         assert key in st
+
+
+# ---------------------------------------------------------------------------
+# sliding-window block freeing (windowed StateSpec, mixer registry)
+# ---------------------------------------------------------------------------
+def make_windowed_sched(window, num_blocks=32, block_size=4, **kw):
+    return make_sched(num_blocks=num_blocks, block_size=block_size,
+                      free_window=window, **kw)
+
+
+def test_window_freeing_frees_out_of_window_prefix():
+    sched, blocks = make_windowed_sched(window=8, max_slots=1)
+    req = sched.submit([1] * 16, 8)
+    plan = sched.schedule()
+    assert len(req.table) == 4                       # 16 tokens / bs 4
+    drive_prefill(sched, plan)                       # chunk 1: done=4, no free
+    for _ in range(3):
+        drive_prefill(sched, sched.schedule())
+    # prefill_done=16, cutoff=16+1-8 -> 2 blocks wholly below the window
+    assert req.table[0] == 0 and req.table[1] == 0
+    assert req.table[2] != 0 and req.table[3] != 0
+    assert req.live_blocks == 2
+
+
+def test_window_freeing_bound_and_liveness():
+    """Live blocks never exceed ceil(window/bs)+1 during decode and never
+    include a block a future query still needs."""
+    window, bs = 8, 4
+    bound = -(-window // bs) + 1
+    sched, blocks = make_windowed_sched(window=window, block_size=bs,
+                                        num_blocks=64, max_slots=1)
+    req = sched.submit([1] * 8, 24)
+    drive_prefill(sched, sched.schedule())
+    drive_prefill(sched, sched.schedule())
+    while req.state is RequestState.RUNNING:
+        sched.schedule()
+        sched.on_decode_token(req, 5)
+        if req.state is not RequestState.RUNNING:
+            break
+        assert req.live_blocks <= bound, (req.total_len, req.table)
+        # every in-window position still has a live block
+        lo = max(0, req.total_len - 1 + 1 - window)
+        for j in range(lo // bs, (req.total_len - 1) // bs + 1):
+            if j < len(req.table):
+                assert req.table[j] != 0, (j, req.table)
+
+
+def test_window_freed_preempt_restore_keeps_alignment():
+    """Preempting a windowed request archives only live blocks; restore
+    rebuilds the table with the freed prefix re-nulled."""
+    spilled = {}
+
+    def spill(req):
+        spilled[req.rid] = [b for b in req.table if b]
+
+    def restore(req):
+        blocks = spilled.pop(req.rid)
+        return [0] * req.null_prefix + sched.blocks.alloc(len(blocks))
+
+    sched, blocks = make_sched(num_blocks=16, block_size=4, max_slots=1,
+                               free_window=8, spill=spill, restore=restore)
+    req = sched.submit([1] * 16, 8)
+    for _ in range(4):
+        drive_prefill(sched, sched.schedule())
+    assert req.null_prefix == 0 and req.table[:2] == [0, 0]
+    # schedule() extends the table for the pending decode write (17 tokens
+    # -> 5 table entries, 3 live) before the forced preemption
+    sched._preempt(req, sched.schedule())
+    assert req.null_prefix == 2 and req.spilled_blocks == 3
+    free_before = blocks.num_free
+    plan = sched.schedule()                          # resumes from the queue
+    assert req in plan.resumed
+    assert req.table[:2] == [0, 0] and req.live_blocks == 3
+    assert blocks.num_free == free_before - 3
+
+
+def test_restore_callback_runs_with_seat_assigned():
+    """The runtime re-seats dense slot-state rows inside the restore
+    callback, so the scheduler must assign req.slot BEFORE invoking it —
+    otherwise a same-cycle re-preemption would spill the seat's stale
+    rows over the good archive entry."""
+    seats = []
+
+    def restore(req):
+        seats.append(req.slot)
+        return sched.blocks.alloc(req.spilled_blocks)
+
+    sched, blocks = make_sched(num_blocks=16, max_slots=1, restore=restore)
+    req = sched.submit([1] * 8, 8)
+    drive_prefill(sched, sched.schedule())
+    drive_prefill(sched, sched.schedule())
+    sched._preempt(req, sched.schedule())
+    plan = sched.schedule()
+    assert req in plan.resumed
+    assert seats == [req.slot] and req.slot >= 0
+
+
+def test_restore_failure_returns_the_seat():
+    """A NoFreeBlocks during restore must hand the popped seat back."""
+    from repro.serve.paged_kv import NoFreeBlocks
+
+    def restore(req):
+        raise NoFreeBlocks("archive cannot re-seat yet")
+
+    sched, blocks = make_sched(num_blocks=16, max_slots=2, restore=restore)
+    req = sched.submit([1] * 8, 8)
+    drive_prefill(sched, sched.schedule())
+    drive_prefill(sched, sched.schedule())
+    sched._preempt(req, sched.schedule())
+    sched.schedule()                          # resume attempt fails
+    assert req.state is RequestState.PREEMPTED and req.slot == -1
+    assert len(sched._free_slots) == 2        # seat not leaked

@@ -19,6 +19,93 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 PRESETS = ("fsdp_tp", "offload_all")
 ARCHS = ("qwen2-0.5b", "deepseek-moe-16b")
+# one config per serving-state family: paged / slot / windowed+slot / MLA
+SERVE_ARCHS = ("qwen2-0.5b", "mamba2-370m", "recurrentgemma-2b",
+               "deepseek-v2-lite-16b")
+# reduced() recurrentgemma has only 2 layers — both RG-LRU, no LOCAL_ATTN
+# — so the windowed kind would never resolve; force one full 1:2 group
+SERVE_ARCH_FIXUPS = {"recurrentgemma-2b": {"num_layers": 3}}
+# the state kinds each arch's report must contain (windowed gate included)
+SERVE_ARCH_KINDS = {
+    "qwen2-0.5b": {"paged"},
+    "mamba2-370m": {"slot"},
+    "recurrentgemma-2b": {"slot", "windowed"},
+    "deepseek-v2-lite-16b": {"paged"},
+}
+
+_MIXER_HOOKS = ("init", "forward", "decode", "init_cache", "init_state",
+                "decode_paged", "prefill_paged")
+
+
+def check_mixer_registry() -> int:
+    """Gate: every mixer kind in configs.base.MIXER_KINDS has a complete
+    MixerSpec (all hooks callable + a valid paged/slot/windowed StateSpec).
+    Adding a mixer kind without registering it fails `make check`."""
+    from repro.configs.base import MIXER_KINDS
+    from repro.models import mixers
+
+    failures = 0
+    for kind in MIXER_KINDS:
+        try:
+            spec = mixers.get_mixer(kind)
+        except ValueError as e:
+            print(f"FAIL mixer registry: {e}")
+            failures += 1
+            continue
+        bad = [h for h in _MIXER_HOOKS if not callable(getattr(spec, h, None))]
+        if bad or spec.state not in mixers.STATE_KINDS:
+            print(f"FAIL mixer {kind!r}: state={spec.state!r} "
+                  f"missing hooks={bad}")
+            failures += 1
+        else:
+            print(f"OK   mixer {kind!r}: state={spec.state!r}, "
+                  f"{len(_MIXER_HOOKS)} hooks")
+    extra = set(mixers.registered_kinds()) - set(MIXER_KINDS)
+    if extra:
+        print(f"FAIL mixer registry: kinds {sorted(extra)} registered but "
+              "absent from configs.base.MIXER_KINDS")
+        failures += 1
+    return failures
+
+
+def check_serve_state(session) -> int:
+    """Gate: the serve preset resolves a state row for every StatePool
+    leaf of each family's config (paged / slot / windowed all covered)."""
+    import jax
+
+    from repro.api import PlanError, plans
+    from repro.configs.base import get_config
+    from repro.serve.paged_kv import StatePool
+
+    import dataclasses
+
+    failures = 0
+    for arch in SERVE_ARCHS:
+        cfg = get_config(arch).reduced()
+        if arch in SERVE_ARCH_FIXUPS:
+            cfg = dataclasses.replace(cfg, **SERVE_ARCH_FIXUPS[arch])
+        try:
+            report = session.explain(plans.serve(), cfg, for_serving=True)
+        except PlanError as e:
+            print(f"FAIL serve-state x {arch}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        scfg = plans.serve().serve_config()
+        n_state = len(jax.tree.leaves(jax.eval_shape(
+            lambda c=cfg, s=scfg: StatePool(
+                c, s.paged_config(model_dtype=c.dtype),
+                num_slots=s.max_slots).state)))
+        got = len(report.serve_state)
+        # memory column is the state kind, "windowed(w=N)" for LOCAL_ATTN
+        kinds = sorted({l.memory.split("(")[0] for l in report.serve_state})
+        ok = (got == n_state and n_state > 0
+              and set(kinds) == SERVE_ARCH_KINDS[arch])
+        print(f"{'OK  ' if ok else 'FAIL'} serve-state x {arch}: "
+              f"{got}/{n_state} leaves, kinds={kinds} "
+              f"(want {sorted(SERVE_ARCH_KINDS[arch])})")
+        if not ok:
+            failures += 1
+    return failures
 
 
 def main() -> int:
@@ -30,6 +117,8 @@ def main() -> int:
 
     session = Supernode()
     failures = 0
+    failures += check_mixer_registry()
+    failures += check_serve_state(session)
     for preset in PRESETS:
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
