@@ -1,26 +1,46 @@
-"""Merge dry-run JSONs: later files override earlier per (arch, shape, mesh).
+"""Merge benchmark JSONs into one artifact.
 
-    PYTHONPATH=src:. python -m benchmarks.merge_results out.json in1.json in2.json ...
+Two input kinds, distinguished by schema:
+
+  - **dry-run results** (``{"results": [...], "failures": [...]}``): later
+    files override earlier ones per ``(arch, shape, multi_pod)`` — the
+    original contract;
+  - **benchmark artifacts** (``results/BENCH_*.json``: serve throughput,
+    RL rollouts, ...): folded under ``"bench"`` keyed by basename, later
+    files overriding earlier same-named ones.
+
+    PYTHONPATH=src:. python -m benchmarks.merge_results out.json \
+        dryrun_full.json results/BENCH_serve.json results/BENCH_rl.json
 """
 import json
+import os
 import sys
 
 
 def merge(paths):
     by_key = {}
     failures = []
+    bench = {}
     for p in paths:
         with open(p) as f:
             d = json.load(f)
+        if "results" not in d:
+            # a benchmark artifact (BENCH_serve.json, BENCH_rl.json, ...)
+            name = os.path.splitext(os.path.basename(p))[0]
+            bench[name] = d
+            continue
         for r in d.get("results", []):
             by_key[(r["arch"], r["shape"], r["multi_pod"])] = r
         failures = [x for x in d.get("failures", [])
                     if not any(x["pair"].startswith(f"{a} x {s} ")
                                for (a, s, _) in by_key)]
-    return {"results": sorted(by_key.values(),
-                              key=lambda r: (r["arch"], r["shape"],
-                                             r["multi_pod"])),
-            "failures": failures}
+    out = {"results": sorted(by_key.values(),
+                             key=lambda r: (r["arch"], r["shape"],
+                                            r["multi_pod"])),
+           "failures": failures}
+    if bench:
+        out["bench"] = dict(sorted(bench.items()))
+    return out
 
 
 if __name__ == "__main__":
@@ -29,4 +49,5 @@ if __name__ == "__main__":
     with open(out, "w") as f:
         json.dump(merged, f, indent=1)
     print(f"{len(merged['results'])} results, {len(merged['failures'])} "
-          f"failures -> {out}")
+          f"failures, {len(merged.get('bench', {}))} bench artifacts "
+          f"-> {out}")

@@ -1,0 +1,164 @@
+"""HyperRL rollout throughput: continuous-batching actor vs sequential
+Generator, plus weight-publication (sync) latency.
+
+MEASURED, same prompt workload both times (mixed prompt lengths and
+rollout budgets, GRPO groups of ``GROUP_SIZE`` samples per prompt,
+temperature 1.0, seeded):
+
+  - ``sequential``  — every sample generated one at a time through the
+                      dense ``Generator`` (the pre-HyperRL actor from the
+                      old rl_colocation toy: B=1, the longest sample
+                      gates nothing because nothing else runs — but
+                      nothing overlaps either);
+  - ``continuous``  — all groups fan out through ``RolloutEngine`` and
+                      HyperServe continuous batching multiplexes them
+                      over the decode slots (chunked prefill interleaves,
+                      finished samples free their seats mid-flight).
+
+Also measured: ``publish`` latency — resharding a full parameter tree
+into the serving layout and installing it (the actor-sync leg of every
+RL iteration), reported as median seconds over several publishes.
+
+The analytic MPMD utilization simulation (benchmarks/mpmd_rl.py, the
+paper's +15% cluster-utilization claim) rides along in the payload so
+``results/BENCH_rl.json`` carries the measured AND modelled halves of
+the §3.3c story in one artifact.
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_json, percentile, row
+from benchmarks.mpmd_rl import simulate_sigma
+from repro.configs.base import RLConfig, ServeConfig, get_config
+from repro.models import model as M
+from repro.rl import RolloutEngine
+from repro.serve.engine import GenerateConfig, Generator
+
+ARCH = "qwen2-0.5b"
+N_PROMPTS = 4                        # GRPO prompt groups
+GROUP_SIZE = 4                       # samples per group
+SEED = 0
+
+
+def _workload(cfg, rng):
+    """(prompt, max_new) per group; every sample in a group shares both."""
+    out = []
+    for _ in range(N_PROMPTS):
+        plen = int(rng.integers(4, 17))
+        mn = int(rng.integers(6, 11))
+        out.append((rng.integers(1, cfg.vocab_size, size=plen).tolist(), mn))
+    return out
+
+
+def _serve_cfg():
+    return ServeConfig(block_size=8, num_blocks=64, max_blocks_per_req=8,
+                       max_slots=4, prefill_chunk=16,
+                       enable_prefix_cache=False)
+
+
+def bench_sequential(cfg, params, workload):
+    gen = Generator(cfg, params, max_len=64)
+    for plen in {len(p) for p, _ in workload}:       # compile per prompt len
+        gen.generate(np.ones((1, plen), np.int32), GenerateConfig(
+            max_new_tokens=2, temperature=1.0))
+    t0 = time.perf_counter()
+    n_tok = 0
+    lat = []
+    for gi, (prompt, mn) in enumerate(workload):
+        for si in range(GROUP_SIZE):                 # one sample at a time
+            t1 = time.perf_counter()
+            gen.generate(np.asarray(prompt, np.int32)[None, :],
+                         GenerateConfig(max_new_tokens=mn, temperature=1.0,
+                                        seed=SEED + gi * GROUP_SIZE + si))
+            n_tok += mn
+            lat.append(time.perf_counter() - t1)
+    dt = time.perf_counter() - t0
+    return {"tokens": n_tok, "wall_s": dt, "tokens_per_sec": n_tok / dt,
+            "sample_p50_s": percentile(lat, 50),
+            "sample_p99_s": percentile(lat, 99)}
+
+
+def bench_continuous(cfg, params, workload):
+    actor = RolloutEngine(cfg, params, serve_cfg=_serve_cfg(),
+                          rl_cfg=RLConfig(group_size=GROUP_SIZE),
+                          seed=SEED)
+    # warmup: compile prefill (both chunk variants) + decode off the clock
+    chunk = _serve_cfg().prefill_chunk
+    actor.submit_group(list(range(1, chunk + 5)), group_size=2,
+                       max_new_tokens=2)
+    actor.drain()
+    actor.engine.tokens_generated = 0
+
+    t0 = time.perf_counter()
+    groups = [actor.submit_group(p, max_new_tokens=mn)
+              for p, mn in workload]
+    actor.drain()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(actor.request(r).generated)
+                for g in groups for r in g.rids)
+    st = actor.stats()
+    return {"tokens": n_tok, "wall_s": dt, "tokens_per_sec": n_tok / dt,
+            "preemptions": st["preemptions"],
+            "finished_requests": st["finished"]}, actor
+
+
+def bench_publish(cfg, actor, n=5):
+    """Median publish->install latency for a full fresh parameter tree."""
+    lats = []
+    for i in range(n):
+        fresh = M.init_model(cfg, jax.random.PRNGKey(100 + i))
+        t0 = time.perf_counter()
+        actor.publish(fresh, wait=True)
+        lats.append(time.perf_counter() - t0)
+    return {"publish_p50_s": percentile(lats, 50),
+            "publish_max_s": max(lats),
+            "versions_installed": actor.version}
+
+
+def run():
+    cfg = get_config(ARCH).reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(SEED)
+    workload = _workload(cfg, rng)
+
+    seq = bench_sequential(cfg, params, workload)
+    cont, actor = bench_continuous(cfg, params, workload)
+    pub = bench_publish(cfg, actor)
+    speedup = cont["tokens_per_sec"] / seq["tokens_per_sec"]
+
+    row("rl.sequential_tok_s", 0.0,
+        f"{seq['tokens_per_sec']:.1f} tok/s (Generator, one sample at a "
+        f"time, p50={seq['sample_p50_s']:.2f}s/sample)")
+    row("rl.continuous_tok_s", 0.0,
+        f"{cont['tokens_per_sec']:.1f} tok/s (RolloutEngine continuous "
+        f"batching, preemptions={cont['preemptions']})")
+    row("rl.rollout_speedup", 0.0,
+        f"{speedup:.2f}x aggregate rollout throughput")
+    row("rl.publish_latency", 0.0,
+        f"p50={pub['publish_p50_s']*1e3:.1f}ms full-tree reshard+install")
+
+    sp_u, mp_u = simulate_sigma(0.6)[2:]
+    payload = {
+        "arch": cfg.name,
+        "workload": {"prompt_groups": N_PROMPTS, "group_size": GROUP_SIZE,
+                     "seed": SEED,
+                     "total_samples": N_PROMPTS * GROUP_SIZE},
+        "serve_config": _serve_cfg().__dict__,
+        "sequential": seq,
+        "continuous": cont,
+        "publish": pub,
+        "speedup_tokens_per_sec": speedup,
+        "analytic_mpmd": {
+            "heavy_tail_util_spmd": sp_u, "heavy_tail_util_mpmd": mp_u,
+            "note": "benchmarks/mpmd_rl.py discrete-event simulation "
+                    "(paper +15% utilization claim)"},
+    }
+    path = emit_json("BENCH_rl.json", payload)
+    row("rl.artifact", 0.0, path)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,8 @@ import traceback
 def main() -> None:
     from benchmarks import (hypershard_derive, kernels_bench, mpmd_bubbles,
                             mpmd_overlap, mpmd_rl, offload_serve,
-                            offload_train, roofline, serve_throughput)
+                            offload_train, rl_throughput, roofline,
+                            serve_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("offload_train (paper §3.2 training)", offload_train),
@@ -18,7 +19,9 @@ def main() -> None:
          serve_throughput),
         ("mpmd_overlap (paper §3.3a)", mpmd_overlap),
         ("mpmd_bubbles (paper §3.3b)", mpmd_bubbles),
-        ("mpmd_rl (paper §3.3c)", mpmd_rl),
+        ("mpmd_rl (paper §3.3c analytic)", mpmd_rl),
+        ("rl_throughput (HyperRL rollouts + weight publication)",
+         rl_throughput),
         ("hypershard (paper §3.4)", hypershard_derive),
         ("kernels", kernels_bench),
         ("roofline (deliverable g)", roofline),

@@ -1,69 +1,77 @@
-"""HyperMPMD cross-model scheduling: RL actor/learner co-location.
+"""HyperRL: colocated RL post-training through the Supernode facade.
 
     PYTHONPATH=src python examples/rl_colocation.py
 
-A miniature sample-evaluate-update loop (the paper's §3.3c workload):
-an ACTOR group generates rollouts with the serving engine while a LEARNER
-group trains on them, both driven by the single-controller MPMDScheduler.
-The Supernode session owns the node-to-module mapping (paper Listing 1)
-and the scheduler; weight sync is an explicit cross-group transfer.  On
-one CPU device the groups colocate; the scheduling/transfer machinery is
-identical on a real supernode.
+The paper's §3.3c workload — a sample-evaluate-update loop with actor and
+learner as HyperMPMD roles on one supernode — as ONE declarative plan:
+
+    rl = session.rl(cfg, plan=plans.rl_colocate(...), params=params)
+    new_params, history = rl.run(prompts_fn, reward_fn)
+
+Per iteration: the actor fans each prompt into a GRPO group and drains it
+through HyperServe continuous batching (stragglers never barrier the
+batch, per-request PRNG seeds make every rollout replayable); the
+caller's reward scores each sample against its group siblings
+(group-relative advantages, no value network); one jit'd clipped
+policy-gradient step updates the learner; and the new weights publish
+back into the actor's serving layout, version-counted — no manual
+``jax.tree.map`` weight copies, no hand-built meshes.
+
+On one CPU device actor and learner colocate; swap the preset for
+``plans.rl_disagg()`` on a multi-device slice and the same loop runs
+rollouts and updates on disjoint submeshes (see launch/rl.py).
 """
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.api import Supernode
-from repro.configs.base import get_config
-from repro.core import mpmd
+from repro.api import Supernode, plans
+from repro.configs.base import RLConfig, ServeConfig, get_config
 from repro.models import model as M
-from repro.optim import adamw as opt_mod
-from repro.serve.engine import GenerateConfig, Generator
-from repro.train import steps as steps_mod
 
 
 def main():
     cfg = get_config("qwen2-0.5b").reduced()
     session = Supernode()            # single-controller over local devices
 
-    # node-to-module mapping (paper Listing 1); 1 CPU device -> colocated
-    n = session.num_devices
-    groups = session.groups({"learner": max(1, n // 2)})
-    groups["actor"] = groups["learner"] if n == 1 else \
-        session.groups({"actor": n - n // 2},
-                       devices=session.devices[n // 2:])["actor"]
-    sched = session.scheduler(groups)
+    # one declaration: learner sharding (preset default), the actor's
+    # paged serving pool, and the RL loop knobs
+    plan = plans.rl_colocate(
+        serve=ServeConfig(block_size=8, num_blocks=64, max_blocks_per_req=8,
+                          max_slots=4, prefill_chunk=16,
+                          enable_prefix_cache=False),
+        rl=RLConfig(group_size=4, prompts_per_iter=2, max_new_tokens=8,
+                    temperature=1.0, lr=1e-4, iterations=3))
 
     params = M.init_model(cfg, jax.random.PRNGKey(0))
-    opt = opt_mod.init_adamw(params)
-    step, _ = steps_mod.make_train_step(cfg, None, None,
-                                        opt_mod.AdamWConfig(lr=1e-3),
-                                        donate=False)
-    gen = Generator(cfg, params, max_len=64)
+    rl = session.rl(cfg, plan=plan, params=params)
 
-    for it in range(3):
-        # actor: rollouts (async dispatch on the actor group)
-        prompts = jnp.ones((4, 8), jnp.int32)
-        t_roll = sched.submit(
-            "actor", lambda p: gen.generate(p, GenerateConfig(max_new_tokens=8,
-                                                              temperature=1.0)),
-            prompts)
-        (rollout,) = sched.wait(t_roll)
+    rng = np.random.default_rng(0)
 
-        # learner: treat rollouts as training data (toy objective)
-        batch = {"inputs": rollout[:, :-1], "targets": rollout[:, 1:],
-                 "mask": jnp.ones_like(rollout[:, 1:], jnp.float32)}
-        t_train = sched.submit("learner", step, params, opt, batch)
-        (params, opt, metrics), = [sched.wait(t_train)[0]]
+    def prompts_fn(_it):
+        return [rng.integers(1, cfg.vocab_size, size=8).tolist()
+                for _ in range(2)]
 
-        # weight sync: learner -> actor (cross-group transfer)
-        gen.params = jax.tree.map(
-            lambda x: mpmd.transfer(x, groups["actor"]), params)
-        print(f"iter {it}: rollout {rollout.shape}, "
-              f"loss {float(metrics['loss']):.4f}")
+    def reward_fn(prompt, tokens):
+        return float(len(set(tokens)))       # toy: reward token diversity
 
-    util = sched.utilization_report()
-    print("per-group busy seconds:", {k: round(v, 3) for k, v in util.items()})
+    def hook(m):
+        print(f"iter {m['iter']}: loss={m['loss']:+.4f} "
+              f"reward={m['reward_mean']:.2f} "
+              f"ratio={m['ratio_mean']:.3f} "
+              f"{m['rollout_tokens']} rollout tok "
+              f"({m['rollout_s']:.2f}s), publish {m['publish_s']*1e3:.1f}ms "
+              f"-> weights v{int(m['weights_version'])}")
+
+    new_params, history = rl.run(prompts_fn, reward_fn, hook=hook)
+
+    # the published policy is exactly what the learner holds: a greedy
+    # probe through the actor replays the learner's argmax token-for-token
+    probe = rl.rollout_greedy(list(range(1, 9)), 5)
+    print("greedy probe on published weights:", probe)
+    print("engine:", {k: round(float(v), 2)
+                      for k, v in rl.stats().items()
+                      if k in ("tokens_generated", "weights_version",
+                               "learner_updates", "preemptions")})
 
 
 if __name__ == "__main__":

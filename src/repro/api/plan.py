@@ -32,7 +32,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
 from repro.api.errors import (HostMemoryError, PlanError, UnknownAxisError)
-from repro.configs.base import ServeConfig
+from repro.configs.base import RLConfig, ServeConfig
 from repro.core.hypershard import ShardingPlan
 from repro.core.layout import Layout
 from repro.core.offload import OffloadConfig
@@ -70,6 +70,10 @@ class HyperPlan:
     prefetch_depth: int = 2                # layers resident in HBM at once
     # -- serving intent ----------------------------------------------------
     serve: Optional[ServeConfig] = None    # paged pool + scheduler knobs
+    # -- RL post-training intent (paper §3.3c) -----------------------------
+    # the sharding axes above describe the LEARNER; the actor's serving leg
+    # is derived (fsdp dropped — see serve/runtime._resolve_serve_plan)
+    rl: Optional[RLConfig] = None          # rollout + GRPO update knobs
     # -- MPMD role intent (paper Listing 1) --------------------------------
     # ((name, device_count), ...); count 0 = auto-balance the remainder
     roles: Tuple[Tuple[str, int], ...] = ()
@@ -159,6 +163,9 @@ class HyperPlan:
     def serve_config(self) -> ServeConfig:
         return self.serve if self.serve is not None else ServeConfig()
 
+    def rl_config(self) -> RLConfig:
+        return self.rl if self.rl is not None else RLConfig()
+
     def roles_dict(self) -> Dict[str, int]:
         return dict(self.roles)
 
@@ -196,6 +203,27 @@ class HyperPlan:
                             "per-layer streaming fetches host-resident "
                             "weights; enable params_on_host or drop "
                             "stream_layers")
+        if self.rl is not None:
+            if self.rl.group_size < 2:
+                raise PlanError(
+                    f"rl.group_size={self.rl.group_size}: group-relative "
+                    "(GRPO) advantages need >= 2 samples per prompt — a "
+                    "singleton group's advantage is identically zero")
+            if self.rl.prompts_per_iter < 1 or self.rl.max_new_tokens < 1:
+                raise PlanError(
+                    f"rl leg needs prompts_per_iter >= 1 and max_new_tokens "
+                    f">= 1, got {self.rl.prompts_per_iter} / "
+                    f"{self.rl.max_new_tokens}")
+            if self.rl.temperature <= 0:
+                raise PlanError(
+                    f"rl.temperature={self.rl.temperature}: rollouts must "
+                    "explore (temperature > 0); greedy rollouts collapse "
+                    "every group to one sample and GRPO advantages vanish")
+            bad = {n for n, _ in self.roles} - {"actor", "learner"}
+            if bad:
+                raise PlanError(
+                    f"an RL plan's roles must be drawn from "
+                    f"{{'actor', 'learner'}}, got {sorted(bad)}")
         seen = set()
         for rname, count in self.roles:
             if rname in seen:

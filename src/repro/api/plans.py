@@ -15,7 +15,7 @@ from __future__ import annotations
 from typing import Callable, Dict
 
 from repro.api.plan import HyperPlan
-from repro.configs.base import ServeConfig
+from repro.configs.base import RLConfig, ServeConfig
 
 _REGISTRY: Dict[str, Callable[..., HyperPlan]] = {}
 
@@ -67,6 +67,28 @@ def serve_disagg(n_prefill: int = 0, n_decode: int = 0, **over) -> HyperPlan:
     return HyperPlan(fsdp=None, serve=ServeConfig(),
                      roles=(("prefill", n_prefill), ("decode", n_decode)),
                      name="serve_disagg").replace(**over)
+
+
+@register
+def rl_colocate(**over) -> HyperPlan:
+    """RL post-training, actor and learner colocated on ONE mesh
+    (paper §3.3c).  The sharding axes describe the learner (fsdp_tp
+    default); the actor's serving leg derives fsdp=None from the same
+    plan, and weight publication reshards learner->actor layout in place
+    (zero-copy rebind when the layouts coincide)."""
+    return HyperPlan(serve=ServeConfig(), rl=RLConfig(),
+                     name="rl_colocate").replace(**over)
+
+
+@register
+def rl_disagg(n_actor: int = 0, n_learner: int = 0, **over) -> HyperPlan:
+    """RL post-training with actor/learner role disaggregation
+    (HyperMPMD Fig. 4c): rollouts stream on the actor submesh while the
+    learner submesh updates; weight publication crosses role groups via
+    ``core.mpmd.transfer``.  Device counts of 0 auto-balance."""
+    return HyperPlan(serve=ServeConfig(), rl=RLConfig(),
+                     roles=(("actor", n_actor), ("learner", n_learner)),
+                     name="rl_disagg").replace(**over)
 
 
 @register

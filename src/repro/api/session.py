@@ -179,8 +179,8 @@ class Supernode:
             raise PlanError(
                 f"plan declares mpmd roles {hp.roles_dict()} but "
                 "session.train runs one SPMD program; roles drive serve() "
-                "(prefill/decode) — drop them or use groups()/scheduler() "
-                "for custom MPMD training")
+                "(prefill/decode) and rl() (actor/learner) — drop them or "
+                "use groups()/scheduler() for custom MPMD training")
         # trainer.train performs the (single) validation + lowering step
         if train_cfg is None:
             train_cfg = trainer.TrainConfig(num_steps=steps or 100)
@@ -205,6 +205,19 @@ class Supernode:
                           prefill_group=groups.get("prefill"),
                           decode_group=groups.get("decode"),
                           seed=seed, moe_dispatch=moe_dispatch)
+
+    def rl(self, cfg, *, plan: Union[None, HyperPlan, object] = None,
+           params=None, adamw=None, seed: int = 0,
+           moe_dispatch: Optional[str] = None):
+        """RL post-training session (HyperRL, paper §3.3c): a continuous-
+        batching rollout actor, a GRPO learner and the version-counted
+        weight-publication path between them, resolved from ONE plan
+        (``plans.rl_colocate()`` / ``plans.rl_disagg()``).  ``params``
+        seeds the policy (e.g. the tree ``session.train`` returned);
+        None initialises fresh under the plan's layouts."""
+        from repro.rl.session import RLSession
+        return RLSession(self, cfg, plan=plan, params=params, adamw=adamw,
+                         seed=seed, moe_dispatch=moe_dispatch)
 
     def generate(self, cfg, params, prompts, *, max_new_tokens: int = 16,
                  temperature: float = 0.0, max_len: Optional[int] = None,

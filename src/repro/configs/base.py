@@ -269,6 +269,32 @@ class ServeConfig:
 
 
 # ---------------------------------------------------------------------------
+# RL post-training knobs (paper §3.3c sample-evaluate-update loops)
+@dataclass(frozen=True)
+class RLConfig:
+    """HyperRL runtime configuration (GRPO-style post-training).
+
+    Rollout knobs drive the actor's continuous-batching fan-out (each
+    prompt is sampled ``group_size`` times for group-relative advantages);
+    update knobs parameterise the masked clipped policy-gradient loss.
+    Frozen so it rides on a :class:`~repro.api.plan.HyperPlan` leg.
+    """
+    # rollout (actor)
+    group_size: int = 4                # GRPO samples per prompt
+    prompts_per_iter: int = 2          # prompt groups per iteration
+    max_new_tokens: int = 8            # rollout length budget
+    temperature: float = 1.0           # sampling temperature (>0)
+    # update (learner)
+    lr: float = 1e-5
+    clip_eps: float = 0.2              # PPO-style ratio clip
+    adv_eps: float = 1e-6              # group-advantage std floor
+    iterations: int = 3                # default loop length (launcher/example)
+
+    def replace(self, **kw) -> "RLConfig":
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Input shapes assigned to this paper
 @dataclass(frozen=True)
 class ShapeConfig:

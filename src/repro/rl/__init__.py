@@ -1,0 +1,29 @@
+"""repro.rl — HyperRL: colocated RL post-training (paper §3.3c).
+
+The third workload class under the Supernode facade (train + serve +
+**post-train**): a continuous-batching rollout actor, a version-counted
+weight-publication path and a GRPO learner, all resolved from one
+:class:`~repro.api.plan.HyperPlan`::
+
+    from repro.api import Supernode, plans
+    rl = Supernode.auto().rl(cfg, plan=plans.rl_colocate(), params=params)
+    new_params, history = rl.run(prompts_fn, reward_fn)
+
+Engines this package composes: :mod:`repro.serve.runtime` (rollouts),
+:mod:`repro.train.steps` idioms (the update), :mod:`repro.core.mpmd`
+(actor/learner role groups + transfers).
+"""
+from repro.configs.base import RLConfig
+from repro.rl.buffer import Rollout, RolloutBuffer, group_advantages
+from repro.rl.learner import GRPOLearner, grpo_loss, make_rl_step
+from repro.rl.publish import WeightPublisher
+from repro.rl.rollout import RolloutEngine, RolloutGroup
+from repro.rl.session import RLSession
+
+__all__ = [
+    "RLConfig", "RLSession",
+    "RolloutEngine", "RolloutGroup",
+    "WeightPublisher",
+    "RolloutBuffer", "Rollout", "group_advantages",
+    "GRPOLearner", "grpo_loss", "make_rl_step",
+]

@@ -1,0 +1,123 @@
+"""Weight publication: live trainer params -> serving engine layout.
+
+The learner trains under its own plan (typically fsdp/tp: parameters
+sharded over the data axes); the actor serves under the serving layout
+(tp only — see ``serve/runtime._resolve_serve_plan`` for why fsdp and
+decode do not mix).  :class:`WeightPublisher` bridges the two *in place*:
+
+  - **resharding** — ``publish`` device_puts the trainer tree onto the
+    serving engine's parameter shardings.  Across role groups (actor and
+    learner on disjoint submeshes) this is exactly
+    :func:`repro.core.mpmd.transfer`; colocated on one mesh it is a
+    resharding all-gather; on a single device it is a zero-copy rebind
+    (the engine simply adopts the trainer's arrays).
+  - **version counter** — a publish only *stages* the new weights.  They
+    install when no request is mid-generation (``in_flight``), so every
+    in-flight decode finishes on the weights it started with; the counter
+    bumps at install time, never at stage time.  Queued-but-unstarted
+    requests pick up the new version (they have computed nothing yet).
+  - **prefix-cache flush** — installing new weights evicts the engine's
+    copy-on-write prefix cache: its retained pages embed *old*-weight KV,
+    and forking them under new weights would splice two policies into one
+    rollout.
+
+Pure host-side control logic plus async device_puts; nothing here blocks
+unless the caller asks (``wait=True``, used to measure sync latency).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core import hypershard
+
+
+class WeightPublisher:
+    """Reshard-and-swap of a ServeEngine's parameters, version-counted."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.version = 0                 # installed-weights version
+        self.staged_version = 0          # latest published (>= version)
+        self._staged = None
+        self._staged_prefill = None
+        if engine.mesh is not None:
+            pshapes = jax.eval_shape(lambda p: p, engine.params)
+            self._shardings = hypershard.make_param_shardings(
+                engine.mesh, pshapes, engine.plan)
+        else:
+            self._shardings = None
+        if getattr(engine, "_params_prefill", None) is not None:
+            pshapes = jax.eval_shape(lambda p: p, engine._params_prefill)
+            self._prefill_shardings = hypershard.make_param_shardings(
+                engine.prefill_group.mesh, pshapes, engine.plan)
+        else:
+            self._prefill_shardings = None
+
+    # ------------------------------------------------------------------
+    def reshard(self, params):
+        """Trainer layout -> serving layout (async; identity off-mesh)."""
+        if self._shardings is None:
+            return params                # single device: zero-copy rebind
+        return jax.tree.map(jax.device_put, params, self._shardings)
+
+    @property
+    def pending(self) -> bool:
+        return self._staged is not None
+
+    def in_flight(self) -> bool:
+        """Any request mid-generation?  Those must finish on old weights.
+
+        Covers PREFILLING/RUNNING seats *and* preempted requests parked in
+        the queue — their archived pages embed old-weight KV, so resuming
+        them under new weights would splice two policies into one rollout.
+        """
+        from repro.serve.scheduler import RequestState
+        sched = self.engine.scheduler
+        if sched.active:
+            return True
+        return any(r.state is RequestState.PREEMPTED for r in sched.queue)
+
+    # ------------------------------------------------------------------
+    def publish(self, params, *, wait: bool = False) -> int:
+        """Stage new weights (resharded into the serving layout).
+
+        Returns the staged version.  Installation happens here iff nothing
+        is in flight; otherwise the caller's engine loop installs at the
+        next idle boundary via :meth:`maybe_install`.  A second publish
+        before install supersedes the first (latest weights win — stale
+        intermediates are never served).
+        """
+        self.staged_version += 1
+        self._staged = self.reshard(params)
+        if self._prefill_shardings is not None:
+            self._staged_prefill = jax.tree.map(
+                jax.device_put, params, self._prefill_shardings)
+        if wait:
+            jax.block_until_ready(self._staged)
+        self.maybe_install()
+        return self.staged_version
+
+    def maybe_install(self) -> bool:
+        """Swap staged weights in if no decode is in flight; True if so."""
+        if self._staged is None or self.in_flight():
+            return False
+        # queued-but-unstarted requests may already hold CoW prefix forks
+        # (admission broke on pool pressure after the fork): those pages
+        # embed OLD-weight KV, so drop them — the request re-prefills from
+        # scratch under the new weights
+        for r in self.engine.scheduler.queue:
+            if r.table or r.shared_blocks:
+                self.engine.blocks.free([b for b in r.table if b])
+                r.table = []
+                r.shared_blocks = 0
+                r.prefill_done = 0
+        self.engine.params = self._staged
+        if self._staged_prefill is not None:
+            self.engine._params_prefill = self._staged_prefill
+        self._staged = self._staged_prefill = None
+        self.version = self.staged_version
+        # retained CoW prefix pages hold old-weight KV: evict them all
+        self.engine._reclaim(self.engine.blocks.num_total)
+        return True

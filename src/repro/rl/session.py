@@ -1,0 +1,178 @@
+"""RLSession: actor + learner as HyperMPMD roles under one HyperPlan.
+
+The paper's third workload class (§3.3c post-training) behind the same
+facade as train/serve: one declarative plan describes the learner's
+sharding (fsdp/tp), the actor's serving knobs (``serve=``), the RL loop
+(``rl=``) and — optionally — an actor/learner device split (``roles=``).
+``Supernode.rl(cfg, plan=plans.rl_colocate())`` resolves it once and
+returns this session; each :meth:`iterate` is one sample-evaluate-update
+cycle:
+
+    rollout   actor fans every prompt into a GRPO group and the
+              continuous-batching engine drains them (stragglers never
+              barrier the batch);
+    evaluate  caller's ``reward_fn(prompt, tokens)`` scores each sample;
+              advantages are group-relative (no value net);
+    update    one jit'd GRPO step on the learner's mesh;
+    publish   new weights reshard into the actor's serving layout
+              (cross-group transfer when disaggregated, zero-copy rebind
+              colocated) — version-counted, in-flight decodes unaffected.
+
+Colocated (no roles) both run on the session mesh; disaggregated the
+:class:`~repro.core.mpmd.MPMDScheduler` dispatches rollout and update on
+their own submeshes and records per-role busy time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.configs.base import RLConfig, ServeConfig
+from repro.rl.buffer import RolloutBuffer
+from repro.rl.learner import GRPOLearner
+from repro.rl.rollout import RolloutEngine
+
+RewardFn = Callable[[List[int], List[int]], float]
+
+
+def serving_mesh_for(mesh):
+    """The actor's serving mesh: the same devices, model-axis only.
+
+    Decoding is tp-only (the serving leg drops fsdp), so a learner mesh's
+    data/pod axes carry no serving meaning — and paged serving under a
+    nontrivial data axis currently miscompiles on the CPU backend (GSPMD
+    inserts a spurious data-axis all-reduce around small-head elementwise
+    ops, doubling K; see the ROADMAP open item).  Colocated RL therefore
+    serves on a flat ``(1, n)`` view of the SAME devices: colocation is a
+    device-set property, not a mesh-shape property, and publish becomes a
+    genuine cross-layout reshard (fsdp/tp grid -> flat tp).
+    """
+    if mesh is None:
+        return None
+    if all(mesh.shape[a] == 1 for a in mesh.axis_names if a != "model"):
+        return mesh
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(mesh.devices.flat)
+    return Mesh(np.array(devs).reshape(1, len(devs)), ("data", "model"))
+
+
+class RLSession:
+    def __init__(self, supernode, cfg, *, plan=None, params=None, adamw=None,
+                 seed: int = 0, moe_dispatch: Optional[str] = None):
+        from repro.api.errors import PlanError
+        from repro.api.plan import HyperPlan
+        from repro.serve.engine import resolve_moe_dispatch
+
+        hp = HyperPlan.coerce(plan)
+        if hp.rl is None:
+            hp = hp.replace(rl=RLConfig())
+        if hp.serve is None:
+            hp = hp.replace(serve=ServeConfig())
+        hp.validate(supernode.layout)
+        self.cfg = cfg
+        self.plan = hp
+        self.rl_cfg = hp.rl_config()
+        groups = supernode._role_groups(hp)
+        if groups and set(groups) != {"actor", "learner"}:
+            raise PlanError(
+                f"RL roles must be exactly {{'actor', 'learner'}}, plan "
+                f"declares {sorted(groups)}")
+        self.groups = groups
+        learner_mesh = groups["learner"].mesh if groups else supernode.mesh
+        actor_mesh = serving_mesh_for(
+            groups["actor"].mesh if groups else supernode.mesh)
+        # ONE dispatch for both sides: the learner's logprobs must be
+        # computed under the same MoE routing the actor sampled with, or
+        # the importance ratio starts biased
+        md = resolve_moe_dispatch(cfg, moe_dispatch)
+
+        lplan = hp.sharding_plan()
+        self.learner = GRPOLearner(cfg, learner_mesh, lplan,
+                                   rl_cfg=self.rl_cfg, params=params,
+                                   adamw=adamw, seed=seed, moe_dispatch=md)
+        # the actor's serving leg: same declaration minus fsdp (decode
+        # cannot amortise per-token weight gathers; the publish path owns
+        # the fsdp->serving resharding instead)
+        self.actor = RolloutEngine(cfg, self.learner.params,
+                                   serve_cfg=hp.serve_config(),
+                                   mesh=actor_mesh,
+                                   plan=lplan.replace(fsdp=None),
+                                   rl_cfg=self.rl_cfg, seed=seed,
+                                   moe_dispatch=md)
+        self.sched = None
+        if groups:
+            from repro.core import mpmd
+            self.sched = mpmd.MPMDScheduler(groups)
+        self.buffer = RolloutBuffer(adv_eps=self.rl_cfg.adv_eps)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, role: str, fn, *args):
+        if self.sched is not None:
+            return self.sched.wait(self.sched.submit(role, fn, *args))[0]
+        return fn(*args)
+
+    def iterate(self, prompts: Sequence[Sequence[int]],
+                reward_fn: RewardFn) -> Dict[str, float]:
+        """One rollout -> advantage -> update -> publish cycle."""
+        t0 = time.perf_counter()
+        groups = [self.actor.submit_group(p) for p in prompts]
+        self._dispatch("actor", self.actor.drain)
+        t_roll = time.perf_counter() - t0
+
+        self.buffer.clear()
+        n_tok = 0
+        rewards_all: List[float] = []
+        for g in groups:
+            ros = self.actor.collect(g)
+            rewards = [float(reward_fn(ro.prompt, ro.tokens)) for ro in ros]
+            self.buffer.add_group(ros, rewards)
+            rewards_all += rewards
+            n_tok += sum(len(ro.tokens) for ro in ros)
+            self.actor.release(g)       # bound engine memory on long loops
+        # pad_len_to quantises the jit shape so the learner step recompiles
+        # only when rollouts genuinely outgrow the previous length bucket,
+        # not on every max-length wiggle across iterations
+        batch = self.buffer.batch(pad_len_to=16,
+                                  pad_rows_to=self.learner.dp_size())
+
+        metrics = self._dispatch("learner", self.learner.update, batch)
+        t_pub = time.perf_counter()
+        self.actor.publish(self.learner.params, wait=True)
+        metrics.update({
+            "reward_mean": sum(rewards_all) / max(len(rewards_all), 1),
+            "rollout_tokens": n_tok,
+            "rollout_s": t_roll,
+            "publish_s": time.perf_counter() - t_pub,
+            "weights_version": self.actor.version,
+        })
+        self.history.append(metrics)
+        return metrics
+
+    def run(self, prompts_fn: Callable[[int], Sequence[Sequence[int]]],
+            reward_fn: RewardFn, *, iterations: Optional[int] = None,
+            hook: Optional[Callable[[Dict[str, float]], None]] = None):
+        """``iterations`` cycles (default ``rl.iterations`` from the plan)."""
+        n = iterations if iterations is not None else self.rl_cfg.iterations
+        for it in range(n):
+            m = self.iterate(prompts_fn(it), reward_fn)
+            if hook:
+                hook({"iter": it, **m})
+        return self.learner.params, self.history
+
+    # ------------------------------------------------------------------
+    def rollout_greedy(self, prompt: Sequence[int],
+                       max_new_tokens: int) -> List[int]:
+        """Greedy probe through the actor (parity/eval; current weights)."""
+        rid = self.actor.submit_probe(prompt, max_new_tokens)
+        self.actor.drain()
+        return self.actor.release_probe(rid)
+
+    def utilization_report(self) -> Dict[str, float]:
+        return self.sched.utilization_report() if self.sched else {}
+
+    def stats(self) -> Dict[str, float]:
+        s = self.actor.stats()
+        s["learner_updates"] = self.learner.updates
+        return s

@@ -41,10 +41,12 @@ class HyperServe:
     # -- intake ------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                temperature: float = 0.0, eos_id: Optional[int] = None,
+               seed: Optional[int] = None, capture_logprobs: bool = False,
                arrival: Optional[float] = None) -> int:
         req = self.engine.scheduler.submit(
             list(prompt), max_new_tokens, temperature=temperature,
-            eos_id=eos_id, arrival=arrival)
+            eos_id=eos_id, seed=seed, capture_logprobs=capture_logprobs,
+            arrival=arrival)
         if req.state is RequestState.REJECTED:
             raise RequestRejected(
                 f"request rejected: prompt_len={len(prompt)} "

@@ -26,6 +26,7 @@ Cache blocks are evicted LRU under pool pressure, before any preemption.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
@@ -114,7 +115,8 @@ class ServeEngine:
             spill=self._spill, restore=self._restore, reclaim=self._reclaim,
             prefix=self._prefix_lookup, retain=self._retain,
             free_window=self.layout.free_window,
-            needs_pages=self.layout.has_paged_state)
+            needs_pages=self.layout.has_paged_state,
+            seed_fn=self._default_seed)
 
         # jit'd units ------------------------------------------------------
         self._decode_step, _ = E.make_paged_serve_step(
@@ -156,8 +158,7 @@ class ServeEngine:
         # prefix cache: token-tuple -> block ids (refs held by the cache)
         self._prefix_cache: "OrderedDict[Tuple[int, ...], List[int]]" = \
             OrderedDict()
-        self._key = jax.random.PRNGKey(seed)
-        self._sample_step = 0
+        self.seed = seed
         self.t_start = time.perf_counter()
         self.tokens_generated = 0
 
@@ -236,13 +237,76 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # sampling
     # ------------------------------------------------------------------
-    def _sample(self, logits_row, temperature: float) -> int:
+    def _default_seed(self, rid: int) -> int:
+        """Per-request seed for requests that didn't pin one at submit."""
+        return (self.seed ^ (rid * 0x9E3779B1)) & 0x7FFFFFFF
+
+    def _sample(self, logits_row, req: Request) -> int:
+        """Sample the request's next token under a per-request PRNG.
+
+        The key depends only on ``(req.seed, len(req.generated))`` — no
+        engine-global counter — so a temperature>0 rollout resamples the
+        identical token stream across runs AND across preemption
+        spill/restore (which never rolls ``generated`` back).  With
+        ``capture_logprobs`` the sampled token's logprob *under the
+        sampling distribution* (temperature-scaled softmax) is appended to
+        ``req.logprobs`` — the behaviour-policy term RL updates need.
+        """
         lg = logits_row[:self.cfg.vocab_size].astype(jnp.float32)
-        if temperature <= 0:
-            return int(jnp.argmax(lg))
-        self._sample_step += 1
-        key = jax.random.fold_in(self._key, self._sample_step)
-        return int(jax.random.categorical(key, lg / temperature))
+        if req.temperature > 0:
+            key = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                     len(req.generated))
+            lg = lg / req.temperature
+            tok = int(jax.random.categorical(key, lg))
+        else:
+            tok = int(jnp.argmax(lg))
+        if req.capture_logprobs:
+            req.logprobs.append(float(jax.nn.log_softmax(lg)[tok]))
+        return tok
+
+    @functools.cached_property
+    def _batched_sampler(self):
+        """jit'd vmap of the per-request sampler (one device op + one
+        transfer for the whole decode batch, instead of a host round-trip
+        per seated slot).  Row semantics are identical to :meth:`_sample`:
+        each row's key is fold_in(PRNGKey(seed), position), the gumbel
+        trick and log_softmax are row-local, so batching never changes
+        the sampled stream (the vmap axis is invisible to a single row).
+        """
+        V = self.cfg.vocab_size
+
+        def one(seed, pos, temp, logits_row):
+            lg = logits_row[:V].astype(jnp.float32) / temp
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+            tok = jax.random.categorical(key, lg)
+            return tok, jax.nn.log_softmax(lg)[tok]
+
+        return jax.jit(jax.vmap(one))
+
+    def _sample_batch(self, runners, logits):
+        """Batched temperature sampling for the decode step's runners.
+
+        Always shaped (max_slots,) — empty seats sample garbage that is
+        never read — so the vmapped sampler compiles exactly once per
+        engine, regardless of how many seats are occupied this step.
+        """
+        B = self.scfg.max_slots
+        seeds = np.zeros((B,), np.uint32)
+        poss = np.zeros((B,), np.int32)
+        temps = np.ones((B,), np.float32)
+        for r in runners:
+            seeds[r.slot] = r.seed
+            poss[r.slot] = len(r.generated)
+            temps[r.slot] = r.temperature
+        toks, lps = self._batched_sampler(jnp.asarray(seeds),
+                                          jnp.asarray(poss),
+                                          jnp.asarray(temps), logits[:, -1])
+        toks = np.asarray(toks)
+        lps = np.asarray(lps)
+        for r in runners:
+            if r.capture_logprobs:
+                r.logprobs.append(float(lps[r.slot]))
+        return {r.slot: int(toks[r.slot]) for r in runners}
 
     # ------------------------------------------------------------------
     # prefill execution
@@ -269,7 +333,7 @@ class ServeEngine:
             jnp.asarray(self._padded_table(req)))
         self.scheduler.on_prefill_chunk(req, n)
         if is_final:
-            first = self._sample(logits[0, n - 1], req.temperature)
+            first = self._sample(logits[0, n - 1], req)
             self.scheduler.on_prompt_complete(req, first)
             self.tokens_generated += 1
 
@@ -297,7 +361,7 @@ class ServeEngine:
         pcaches = jax.tree.map(lambda a: jax.device_put(a, dst), pcaches)
         self.pool.seat_prefill_caches(pcaches, req.table, S)
         self.scheduler.on_prefill_chunk(req, S - req.prefill_done)
-        first = self._sample(logits[0, S - 1], req.temperature)
+        first = self._sample(logits[0, S - 1], req)
         self.scheduler.on_prompt_complete(req, first)
         self.tokens_generated += 1
 
@@ -337,16 +401,19 @@ class ServeEngine:
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
                 self.pool.state, jnp.asarray(tables),
                 jnp.asarray(slot_mask))
-            if all(r.temperature <= 0 for r in runners):
+            if all(r.temperature <= 0 and not r.capture_logprobs
+                   for r in runners):
                 # batched greedy: one device op + one transfer for the whole
                 # batch instead of a sync per seated slot
                 nxt = np.asarray(jnp.argmax(
                     logits[:, -1, :self.cfg.vocab_size].astype(jnp.float32),
                     axis=-1))
                 picks = {r.slot: int(nxt[r.slot]) for r in runners}
+            elif all(r.temperature > 0 for r in runners):
+                # batched stochastic (the RL rollout hot path)
+                picks = self._sample_batch(runners, logits)
             else:
-                picks = {r.slot: self._sample(logits[r.slot, -1],
-                                              r.temperature)
+                picks = {r.slot: self._sample(logits[r.slot, -1], r)
                          for r in runners}
             for r in runners:
                 tok = picks[r.slot]

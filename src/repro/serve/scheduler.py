@@ -68,9 +68,15 @@ class Request:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     arrival: float = 0.0
+    # sampling PRNG seed; resolved at submit (never None afterwards) so a
+    # temperature>0 rollout is bit-reproducible across runs and across
+    # preemption spill/restore (the key depends only on seed + position)
+    seed: Optional[int] = None
+    capture_logprobs: bool = False            # record sampled-token logprobs
     state: RequestState = RequestState.QUEUED
     prefill_done: int = 0                     # prompt tokens already paged in
     generated: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
     table: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     shared_blocks: int = 0                    # CoW prefix-cache blocks reused
@@ -134,6 +140,7 @@ class ContinuousScheduler:
                  retain: Callable[[Request], None] = lambda r: None,
                  free_window: Optional[int] = None,
                  needs_pages: bool = True,
+                 seed_fn: Callable[[int], int] = lambda rid: rid,
                  clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
         self.blocks = blocks
@@ -153,6 +160,7 @@ class ContinuousScheduler:
         self._reclaim = reclaim
         self._prefix = prefix
         self._retain = retain
+        self._seed_fn = seed_fn
         self._clock = clock
         self.queue: Deque[Request] = deque()
         self.active: List[Request] = []    # PREFILLING + RUNNING, FCFS order
@@ -164,10 +172,19 @@ class ContinuousScheduler:
     # -- intake ------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int, *,
                temperature: float = 0.0, eos_id: Optional[int] = None,
+               seed: Optional[int] = None, capture_logprobs: bool = False,
                arrival: Optional[float] = None) -> Request:
-        req = Request(rid=next(self._rid), prompt=list(prompt),
+        rid = next(self._rid)
+        # mask into uint32 range: the batched sampler packs seeds into a
+        # uint32 array, and a negative/oversized pinned seed must not be
+        # able to crash the engine loop mid-decode (the masked value is
+        # what gets recorded, so replays still work)
+        req = Request(rid=rid, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       eos_id=eos_id,
+                      seed=(int(seed) & 0x7FFFFFFF) if seed is not None
+                      else self._seed_fn(rid),
+                      capture_logprobs=capture_logprobs,
                       arrival=self._clock() if arrival is None else arrival)
         self.requests[req.rid] = req
         need = blocks_for(req.prompt_len + max_new_tokens, self.block_size)

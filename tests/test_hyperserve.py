@@ -120,6 +120,37 @@ def test_streaming_api(qwen_f32):
     assert list(serve.stream(rid)) == want
 
 
+def test_seeded_sampling_reproducible_and_recorded(qwen_f32):
+    """temperature>0 with a pinned seed replays the identical stream run
+    to run; the resolved seed is recorded on the Request even when the
+    caller pins none, so ANY rollout can be replayed after the fact."""
+    cfg, params = qwen_f32
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=2, prefill_chunk=4)
+
+    def run(seed):
+        serve = HyperServe(cfg, params, serve_cfg=scfg)
+        rid = serve.submit([1, 2, 3, 4, 5], 6, temperature=1.0, seed=seed)
+        serve.join()
+        req = serve.engine.scheduler.requests[rid]
+        return req.generated, req.seed
+
+    toks_a, seed_a = run(123)
+    toks_b, seed_b = run(123)
+    assert toks_a == toks_b and seed_a == seed_b == 123
+    toks_c, _ = run(124)
+    assert toks_c != toks_a, "different seeds should explore"
+    # unpinned: the engine records the seed it resolved -> replayable
+    toks_d, recorded = run(None)
+    assert recorded is not None
+    assert run(recorded)[0] == toks_d
+    # out-of-range pinned seeds are masked, never crash the batched
+    # sampler's uint32 packing, and the RECORDED (masked) seed replays
+    toks_e, rec_e = run(-1)
+    assert 0 <= rec_e <= 0x7FFFFFFF
+    assert run(rec_e)[0] == toks_e
+
+
 def test_serve_on_forced_8device_mesh():
     """Sharded continuous batching (8-dev mesh) matches the 1-device run."""
     run_subprocess("""

@@ -1,0 +1,309 @@
+"""HyperRL: rollout -> advantage -> update -> publish, end to end.
+
+Load-bearing properties:
+
+  - the RL mini-loop runs >= 2 full iterations through the Supernode
+    facade and the *published* weights are exactly the learner's: a
+    greedy rollout through the actor is token-identical to a fresh
+    sequential ``Generator`` built from the new params (1-device here,
+    forced 8-device mesh with an fsdp_tp learner plan in the subprocess
+    test);
+  - the publish version counter: weights staged while a request is
+    mid-generation do NOT install until it finishes — in-flight decodes
+    complete on the policy that started them;
+  - per-request seeded PRNG: temperature>0 rollouts replay
+    bit-identically across runs and across preemption spill/restore,
+    tokens and captured logprobs both.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PlanError, Supernode, plans
+from repro.configs.base import RLConfig, ServeConfig, get_config
+from repro.models import model as M
+from repro.rl import (GRPOLearner, Rollout, RolloutBuffer, RolloutEngine,
+                      group_advantages)
+from repro.serve.engine import GenerateConfig, Generator
+from tests.conftest import run_subprocess
+
+
+@pytest.fixture(scope="module")
+def qwen_f32():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def greedy_baseline(cfg, params, prompt, max_new):
+    """Fresh sequential Generator — the parity oracle for published weights."""
+    gen = Generator(cfg, params, max_len=128)
+    out = gen.generate(jnp.asarray(prompt, jnp.int32)[None, :],
+                       GenerateConfig(max_new_tokens=max_new))
+    return out[0, len(prompt):].tolist()
+
+
+def small_serve(**kw):
+    base = dict(block_size=4, num_blocks=64, max_blocks_per_req=8,
+                max_slots=4, prefill_chunk=8, enable_prefix_cache=False)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# units: advantages + buffer
+# ---------------------------------------------------------------------------
+def test_group_advantages_are_group_relative():
+    adv = group_advantages([1.0, 2.0, 3.0])
+    assert abs(sum(adv)) < 1e-9                    # centred on the group
+    assert adv[0] < adv[1] < adv[2]
+    assert group_advantages([2.0, 2.0, 2.0]) == [0.0, 0.0, 0.0]
+    assert group_advantages([5.0]) == [0.0]        # singleton: no baseline
+
+
+def test_buffer_batch_layout_and_padding():
+    buf = RolloutBuffer()
+    buf.add_group([Rollout(prompt=[1, 2, 3], tokens=[4, 5],
+                           logprobs=[-0.5, -0.7], group=0),
+                   Rollout(prompt=[1, 2, 3], tokens=[6, 7, 8],
+                           logprobs=[-0.1, -0.2, -0.3], group=0)],
+                  rewards=[1.0, 3.0])
+    b = buf.batch(pad_rows_to=4)
+    assert b["inputs"].shape == (4, 5)             # longest seq 6, shift-by-1
+    # row 0: seq [1,2,3,4,5]; response targets are positions 2,3
+    assert b["inputs"][0].tolist() == [1, 2, 3, 4, 0]
+    assert b["targets"][0].tolist() == [2, 3, 4, 5, 0]
+    assert b["mask"][0].tolist() == [0, 0, 1, 1, 0]
+    assert b["behaviour_logp"][0].tolist() == pytest.approx(
+        [0, 0, -0.5, -0.7, 0])
+    # advantages: group z-scores, sign matches reward ordering
+    assert b["advantages"][0] < 0 < b["advantages"][1]
+    # padding rows contribute nothing
+    assert b["mask"][2:].sum() == 0 and b["advantages"][2:].sum() == 0
+    with pytest.raises(ValueError):                # logprobs not captured
+        buf.add(Rollout(prompt=[1], tokens=[2, 3], logprobs=[], group=1))
+        buf.batch()
+
+
+def test_rl_plan_validation():
+    assert "rl_colocate" in plans.names() and "rl_disagg" in plans.names()
+    with pytest.raises(PlanError):                 # singleton groups: no GRPO
+        plans.rl_colocate(rl=RLConfig(group_size=1)).validate()
+    with pytest.raises(PlanError):                 # greedy rollouts: no signal
+        plans.rl_colocate(rl=RLConfig(temperature=0.0)).validate()
+    with pytest.raises(PlanError):                 # RL roles are actor/learner
+        plans.rl_colocate(roles=(("prefill", 1),)).validate()
+    plans.rl_disagg().validate()                   # presets themselves pass
+
+
+# ---------------------------------------------------------------------------
+# the acceptance loop (smoke: runs under `make check`)
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+def test_rl_mini_loop_publish_parity(qwen_f32):
+    """>= 2 iterations of rollout->advantage->update->publish; greedy
+    post-publish rollouts token-identical to a fresh Generator on the
+    updated params; version counter ticks once per publish."""
+    cfg, params = qwen_f32
+    session = Supernode()
+    plan = plans.rl_colocate(
+        serve=small_serve(),
+        rl=RLConfig(group_size=3, prompts_per_iter=2, max_new_tokens=6,
+                    temperature=1.0, lr=1e-3))
+    rl = session.rl(cfg, plan=plan, params=params)
+    before = jax.tree.leaves(params)[0].copy()
+
+    prompts = [list(range(1, 7)), list(range(10, 18))]
+    for it in range(2):
+        m = rl.iterate(prompts, lambda p, t: float(len(set(t))))
+        assert np.isfinite(m["loss"])
+        assert m["weights_version"] == it + 1      # one install per iterate
+        # logprob capture is consistent: on-policy ratio starts at ~1
+        assert m["ratio_mean"] == pytest.approx(1.0, abs=1e-3)
+
+    # the update actually moved the policy
+    after = jax.tree.leaves(rl.learner.params)[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+    probe = list(range(1, 9))
+    want = greedy_baseline(cfg, rl.learner.params, probe, 5)
+    assert rl.rollout_greedy(probe, 5) == want, \
+        "published weights diverge from the learner's"
+
+
+def test_rl_mini_loop_8device_fsdp_learner():
+    """Same acceptance loop on a forced 8-device (2,4) mesh: fsdp_tp
+    learner plan, actor serving tp-only on the same mesh; post-publish
+    greedy rollout matches a fresh single-host Generator built from the
+    gathered new params."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.api import Supernode, plans
+from repro.configs.base import get_config, RLConfig, ServeConfig
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+session = Supernode((2, 4))                       # data=2 (fsdp), model=4 (tp)
+plan = plans.rl_colocate(
+    serve=ServeConfig(block_size=4, num_blocks=64, max_blocks_per_req=8,
+                      max_slots=4, prefill_chunk=8,
+                      enable_prefix_cache=False),
+    rl=RLConfig(group_size=3, prompts_per_iter=2, max_new_tokens=6,
+                temperature=1.0, lr=1e-3))
+assert plan.fsdp, "the learner plan must be fsdp-sharded for this test"
+rl = session.rl(cfg, plan=plan, params=params)
+prompts = [list(range(1, 7)), list(range(10, 18))]
+for it in range(2):
+    m = rl.iterate(prompts, lambda p, t: float(len(set(t))))
+    assert m["weights_version"] == it + 1, m
+
+probe = list(range(1, 9))
+got = rl.rollout_greedy(probe, 5)
+host_params = jax.device_get(rl.learner.params)   # gather fsdp shards
+gen = Generator(cfg, host_params, max_len=64)
+want = gen.generate(jnp.asarray(probe, jnp.int32)[None, :],
+                    GenerateConfig(max_new_tokens=5))[0, len(probe):].tolist()
+assert got == want, (got, want)
+print("RL-MESH8-OK")
+""", devices=8, timeout=1200)
+
+
+# ---------------------------------------------------------------------------
+# weight publication semantics
+# ---------------------------------------------------------------------------
+def test_publish_version_counter_in_flight(qwen_f32):
+    """Weights staged mid-generation must not install until the in-flight
+    request finishes: it completes entirely on the OLD policy, the
+    version bumps only at the idle boundary, and the next request runs
+    on the NEW policy."""
+    cfg, params_old = qwen_f32
+    params_new = M.init_model(cfg, jax.random.PRNGKey(7))
+    prompt = list(range(1, 9))
+    want_old = greedy_baseline(cfg, params_old, prompt, 8)
+    want_new = greedy_baseline(cfg, params_new, prompt, 8)
+    assert want_old != want_new, "weak test: policies agree on this prompt"
+
+    actor = RolloutEngine(cfg, params_old, serve_cfg=small_serve())
+    rid = actor.submit_probe(prompt, 8)
+    for _ in range(3):                             # request mid-generation
+        actor.step()
+    assert not actor.request(rid).done
+    v = actor.publish(params_new)
+    assert v == 1 and actor.version == 0, "installed while in flight"
+    assert actor.publisher.pending
+    actor.drain()
+    assert actor.request(rid).generated == want_old, \
+        "in-flight request saw the new weights"
+    assert actor.version == 1 and not actor.publisher.pending
+
+    rid2 = actor.submit_probe(prompt, 8)
+    actor.drain()
+    assert actor.request(rid2).generated == want_new
+
+
+def test_publish_supersede_and_idle_install(qwen_f32):
+    """Publishing on an idle engine installs immediately; a second
+    publish before install supersedes the first (latest weights win)."""
+    cfg, params = qwen_f32
+    p1 = M.init_model(cfg, jax.random.PRNGKey(1))
+    p2 = M.init_model(cfg, jax.random.PRNGKey(2))
+    actor = RolloutEngine(cfg, params, serve_cfg=small_serve())
+    assert actor.publish(p1) == 1 and actor.version == 1   # idle: immediate
+
+    prompt = list(range(3, 11))
+    rid = actor.submit_probe(prompt, 6)
+    for _ in range(2):
+        actor.step()
+    assert not actor.request(rid).done
+    actor.publish(p2)
+    actor.publish(params)                          # supersedes p2
+    assert actor.version == 1 and actor.publisher.staged_version == 3
+    actor.drain()
+    assert actor.version == 3
+    rid2 = actor.submit_probe(prompt, 6)
+    actor.drain()
+    assert actor.request(rid2).generated == greedy_baseline(
+        cfg, params, prompt, 6)
+
+
+# ---------------------------------------------------------------------------
+# reproducible stochastic rollouts (per-request PRNG)
+# ---------------------------------------------------------------------------
+def _stochastic_group(cfg, params, scfg, seeds):
+    actor = RolloutEngine(cfg, params, serve_cfg=scfg,
+                          rl_cfg=RLConfig(group_size=len(seeds),
+                                          max_new_tokens=8, temperature=1.0))
+    g = actor.submit_group(list(range(1, 5)), seeds=seeds)
+    actor.drain()
+    ros = actor.collect(g)
+    return ([ro.tokens for ro in ros], [ro.logprobs for ro in ros],
+            actor.engine.stats())
+
+
+def test_seeded_rollouts_bit_reproducible_across_preemption(qwen_f32):
+    """The same seeds replay the same tokens AND logprobs, run to run —
+    including when pool pressure forces preemption spill/restore mid-
+    rollout (the PRNG key depends on seed+position, never engine state)."""
+    cfg, params = qwen_f32
+    seeds = [11, 12]
+    ample = small_serve()
+    tight = small_serve(block_size=2, num_blocks=9, max_blocks_per_req=6,
+                        max_slots=2, prefill_chunk=4)
+    toks_a, lps_a, _ = _stochastic_group(cfg, params, ample, seeds)
+    toks_b, lps_b, st = _stochastic_group(cfg, params, tight, seeds)
+    assert st["preemptions"] >= 1, "tight pool never preempted; weak test"
+    # preemption spill/restore never changes the sampled stream; logprobs
+    # agree to float tolerance (the two pool configs compile different
+    # batch shapes, so XLA reduction order differs in the last bits)
+    assert toks_a == toks_b
+    for a, b in zip(lps_a, lps_b):
+        assert np.allclose(a, b, atol=1e-5)
+    # distinct seeds genuinely explore
+    assert toks_a[0] != toks_a[1]
+    # replays of the SAME engine config are bit-identical, preempted or not
+    assert _stochastic_group(cfg, params, ample, seeds)[:2] == (toks_a, lps_a)
+    assert _stochastic_group(cfg, params, tight, seeds)[:2] == (toks_b, lps_b)
+
+
+def test_rl_disagg_roles_on_8dev_mesh():
+    """rl_disagg: actor and learner on disjoint submeshes; publish
+    crosses role groups and greedy parity still holds."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.api import Supernode, plans
+from repro.configs.base import get_config, RLConfig, ServeConfig
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+session = Supernode()                              # 8 flat devices
+plan = plans.rl_disagg(
+    serve=ServeConfig(block_size=4, num_blocks=64, max_blocks_per_req=8,
+                      max_slots=2, prefill_chunk=8,
+                      enable_prefix_cache=False),
+    rl=RLConfig(group_size=2, max_new_tokens=5, temperature=1.0, lr=1e-3))
+rl = session.rl(cfg, plan=plan, params=params)
+assert set(rl.groups) == {"actor", "learner"}
+assert rl.actor.engine.mesh is rl.groups["actor"].mesh
+m = rl.iterate([list(range(1, 7))], lambda p, t: float(len(set(t))))
+assert m["weights_version"] == 1, m
+probe = list(range(1, 9))
+got = rl.rollout_greedy(probe, 5)
+host_params = jax.device_get(rl.learner.params)
+gen = Generator(cfg, host_params, max_len=64)
+want = gen.generate(jnp.asarray(probe, jnp.int32)[None, :],
+                    GenerateConfig(max_new_tokens=5))[0, len(probe):].tolist()
+assert got == want, (got, want)
+assert set(rl.utilization_report()) >= {"actor", "learner"}
+print("RL-DISAGG-OK")
+""", devices=8, timeout=1200)

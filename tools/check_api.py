@@ -36,6 +36,51 @@ SERVE_ARCH_KINDS = {
 _MIXER_HOOKS = ("init", "forward", "decode", "init_cache", "init_state",
                 "decode_paged", "prefill_paged")
 
+# the HyperRL public surface: every name must exist in repro.rl.__all__
+# AND resolve to a real attribute (a rename without the alias fails here)
+RL_EXPORTS = ("RLConfig", "RLSession", "RolloutEngine", "RolloutGroup",
+              "WeightPublisher", "RolloutBuffer", "Rollout",
+              "group_advantages", "GRPOLearner", "grpo_loss", "make_rl_step")
+RL_PRESETS = ("rl_colocate", "rl_disagg")
+
+
+def check_rl_api(session) -> int:
+    """Gate: repro.rl exports + the two RL plan presets resolve (and the
+    RL-leg validation actually rejects malformed GRPO knobs)."""
+    import repro.rl as rl
+    from repro.api import PlanError, plans
+    from repro.configs.base import RLConfig, get_config
+
+    failures = 0
+    missing = [n for n in RL_EXPORTS
+               if n not in rl.__all__ or not hasattr(rl, n)]
+    if missing:
+        print(f"FAIL rl exports: missing {missing}")
+        failures += 1
+    else:
+        print(f"OK   rl exports: {len(RL_EXPORTS)} names")
+    for name in RL_PRESETS:
+        if name not in plans.names():
+            print(f"FAIL rl preset {name!r}: not registered")
+            failures += 1
+            continue
+        try:
+            report = session.explain(plans.get(name)(),
+                                     get_config("qwen2-0.5b").reduced())
+            c = report.coverage()
+            print(f"OK   rl preset {name!r}: explain resolves "
+                  f"({c['param']} params, {c['fallbacks']} fallbacks)")
+        except PlanError as e:
+            print(f"FAIL rl preset {name!r}: {type(e).__name__}: {e}")
+            failures += 1
+    try:
+        plans.rl_colocate(rl=RLConfig(group_size=1)).validate()
+        print("FAIL rl validation: singleton GRPO group was accepted")
+        failures += 1
+    except PlanError:
+        print("OK   rl validation: singleton GRPO group rejected")
+    return failures
+
 
 def check_mixer_registry() -> int:
     """Gate: every mixer kind in configs.base.MIXER_KINDS has a complete
@@ -119,6 +164,7 @@ def main() -> int:
     failures = 0
     failures += check_mixer_registry()
     failures += check_serve_state(session)
+    failures += check_rl_api(session)
     for preset in PRESETS:
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
