@@ -1,16 +1,29 @@
-# Tooling entry points. `make check` is the fast CI gate: byte-compile
-# everything, smoke the public session API (tools/check_api.py), then run
-# the pytest smoke marker. `make test` is the full tier-1 suite.
+# Tooling entry points. `make check` is the fast CI gate: lint,
+# byte-compile everything, smoke the public session API
+# (tools/check_api.py), then run the pytest smoke marker. `make test` is
+# the full tier-1 suite. `make bench-gate` re-runs the tiny fixed-seed
+# throughput benchmarks and fails on a >25% ratio regression against the
+# checked-in results/BENCH_*.json baselines.
 PY ?= python
 
-.PHONY: check test compile
+.PHONY: check test compile lint bench-gate
 
 compile:
 	$(PY) -m compileall -q src tools examples benchmarks
 
-check: compile
+lint:
+	@if $(PY) -c "import ruff" 2>/dev/null; then \
+		$(PY) -m ruff check src tools tests examples benchmarks; \
+	else \
+		echo "lint: ruff not installed locally — skipping (CI runs it)"; \
+	fi
+
+check: compile lint
 	$(PY) tools/check_api.py
 	$(PY) -m pytest -q -m smoke
 
 test:
 	$(PY) -m pytest -x -q
+
+bench-gate:
+	$(PY) tools/bench_gate.py

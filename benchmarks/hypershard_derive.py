@@ -10,7 +10,6 @@ Proxy metrics we can actually measure:
   - strategy PORTABILITY: the same declaration derives valid strategies on
     three different device matrices with zero model-code change.
 """
-import inspect
 import time
 
 import jax

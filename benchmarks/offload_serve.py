@@ -11,12 +11,11 @@ blocks at host bandwidth.
 MEASURED: the KVCachePool actually serving attention with most state on
 the host tier (CPU container, correctness + accounting).
 """
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_call
 from repro.configs.base import get_config
-from repro.core import offload as off, topology
+from repro.core import topology
 from repro.core.kvcache import KVCachePool, KVPoolConfig
 
 

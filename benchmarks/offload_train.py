@@ -11,7 +11,6 @@ Two parts:
      non-offloaded train step (same machine, memory-kind plumbing active);
      demonstrates the code path works end to end.
 """
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_call

@@ -2,11 +2,10 @@
 
     PYTHONPATH=src:. python -m benchmarks.render_experiments > /tmp/tables.md
 """
-import json
 import sys
 
 from benchmarks.common import load_dryrun
-from repro.configs.base import SHAPES, get_config
+from repro.configs.base import SHAPES
 
 
 def gib(x):

@@ -84,11 +84,13 @@ def bench_continuous(cfg, params, workload):
     actor = RolloutEngine(cfg, params, serve_cfg=_serve_cfg(),
                           rl_cfg=RLConfig(group_size=GROUP_SIZE),
                           seed=SEED)
-    # warmup: compile prefill (both chunk variants) + decode off the clock
+    # warmup: compile prefill (every power-of-two chunk-batch bucket,
+    # including the 1-row bucket stragglers hit) and decode off the clock
     chunk = _serve_cfg().prefill_chunk
-    actor.submit_group(list(range(1, chunk + 5)), group_size=2,
-                       max_new_tokens=2)
-    actor.drain()
+    for g in (1, 2, 4):
+        actor.submit_group(list(range(1, chunk + 5)), group_size=g,
+                           max_new_tokens=2)
+        actor.drain()
     actor.engine.tokens_generated = 0
 
     t0 = time.perf_counter()

@@ -6,8 +6,6 @@ and prints the full baseline table + dominant bottleneck + the
 MODEL_FLOPS/HLO_FLOPS usefulness ratio.
 """
 from benchmarks.common import load_dryrun, row
-from repro.configs.base import SHAPES, get_config
-from repro.core import topology
 
 
 def fmt_table(results):

@@ -42,6 +42,12 @@ HYBRID_ARCH = "recurrentgemma-2b"
 N_REQUESTS = 10
 MEAN_INTERARRIVAL_STEPS = 2          # Poisson arrivals, in engine steps
 SEED = 0
+# long-prompt workload for the batched-prefill comparison: prompts span
+# several chunks each and decode budgets are small, so prefill dominates
+# and the batched-vs-per-request difference is what gets measured
+LONG_N_REQUESTS = 8
+LONG_PROMPT_RANGE = (48, 97)
+LONG_MAX_NEW_RANGE = (2, 5)
 
 
 def _mixer_mix(cfg):
@@ -71,6 +77,26 @@ def _serve_cfg():
                        enable_prefix_cache=False)
 
 
+def _long_workload(cfg, rng):
+    out = []
+    for _ in range(LONG_N_REQUESTS):
+        plen = int(rng.integers(*LONG_PROMPT_RANGE))
+        mn = int(rng.integers(*LONG_MAX_NEW_RANGE))
+        out.append((rng.integers(1, cfg.vocab_size, size=plen).tolist(), mn))
+    return out
+
+
+def _long_serve_cfg(batched: bool):
+    """batched=False pins the pre-batching behaviour (one chunk, one jit
+    call per step); batched=True is the new default-shaped step (all
+    scheduled chunks in one call)."""
+    n = 4 if batched else 1
+    return ServeConfig(block_size=8, num_blocks=192, max_blocks_per_req=16,
+                       max_slots=4, prefill_chunk=16,
+                       prefill_chunks_per_step=n, prefill_batch=n,
+                       enable_prefix_cache=False)
+
+
 def _collect(serve, rids, t0):
     reqs = [serve.engine.scheduler.requests[r] for r in rids]
     lats = [r.t_finish - r.arrival for r in reqs]
@@ -91,14 +117,24 @@ def _collect(serve, rids, t0):
 def _warmup(serve):
     """Compile the prefill/decode units outside the timed window.
 
-    The prompt spans two chunks so both prefill variants (mid-chunk
-    without logits, final chunk with) get compiled.
+    One pass per power-of-two prefill bucket up to the engine's per-step
+    budget (the batched step compiles one variant per bucket), each
+    prompt spanning two chunks so mid-prompt and final chunks both
+    compile before the clock starts.
     """
-    chunk = serve.engine.scfg.prefill_chunk
-    rid = serve.submit(list(range(1, chunk + 5)), 2)
-    serve.join()
+    scfg = serve.engine.scfg
+    chunk = scfg.prefill_chunk
+    top = min(scfg.prefill_batch, scfg.prefill_chunks_per_step,
+              scfg.max_slots)
+    b = 1
+    while True:
+        for _ in range(b):
+            serve.submit(list(range(1, chunk + 5)), 2)
+        serve.join()
+        if b >= top:
+            break
+        b = min(2 * b, top)
     serve.engine.tokens_generated = 0
-    return rid
 
 
 def bench_serial(cfg, params, workload):
@@ -138,6 +174,65 @@ def bench_continuous(cfg, params, workload):
     return res, serve
 
 
+def bench_long_prefill(cfg, params, workload, *, batched: bool):
+    """Long-prompt Poisson run; reports prefill-centric throughput.
+
+    Same engine, same workload, same arrivals — the only difference is
+    whether the per-step chunk budget rides one batched jit call
+    (prefill_chunks_per_step=prefill_batch=4) or the pre-batching
+    one-chunk-per-step dispatch (=1)."""
+    serve = HyperServe(cfg, params, serve_cfg=_long_serve_cfg(batched))
+    _warmup(serve)
+    rng = np.random.default_rng(SEED + 2)
+    gaps = rng.poisson(MEAN_INTERARRIVAL_STEPS, size=len(workload))
+    t0 = time.perf_counter()
+    rids = []
+    for (prompt, mn), gap in zip(workload, gaps):
+        rids.append(serve.submit(prompt, mn))
+        for _ in range(int(gap)):
+            serve.step_once()
+    while serve.engine.scheduler.has_work():
+        serve.step_once()
+    res = _collect(serve, rids, t0)
+    st = serve.stats()
+    prompt_tokens = sum(len(p) for p, _ in workload)
+    res.update({
+        "prompt_tokens": prompt_tokens,
+        "prefill_tok_s": prompt_tokens / res["wall_s"],
+        "prefill_calls": st["prefill_calls"],
+        "prefill_chunks": st["prefill_chunks"],
+        "chunks_per_call": st["prefill_chunks"] / max(st["prefill_calls"], 1),
+    })
+    return res
+
+
+def _run_long_prefill(cfg, params, tag: str):
+    rng = np.random.default_rng(SEED + 2)
+    workload = _long_workload(cfg, rng)
+    serial = bench_long_prefill(cfg, params, workload, batched=False)
+    batched = bench_long_prefill(cfg, params, workload, batched=True)
+    lift_prefill = serial["prefill_tok_s"] and (
+        batched["prefill_tok_s"] / serial["prefill_tok_s"])
+    lift_total = batched["tokens_per_sec"] / serial["tokens_per_sec"]
+    row(f"serve.{tag}.prefill_batched", 0.0,
+        f"{batched['prefill_tok_s']:.1f} prompt tok/s "
+        f"({batched['chunks_per_call']:.2f} chunks/jit call) vs "
+        f"{serial['prefill_tok_s']:.1f} per-request "
+        f"-> {lift_prefill:.2f}x prefill, {lift_total:.2f}x aggregate "
+        "(long-prompt Poisson workload)")
+    return {
+        "workload": {"requests": LONG_N_REQUESTS,
+                     "prompt_len_range": list(LONG_PROMPT_RANGE),
+                     "max_new_range": list(LONG_MAX_NEW_RANGE),
+                     "poisson_mean_steps": MEAN_INTERARRIVAL_STEPS,
+                     "seed": SEED + 2},
+        "per_request": serial,
+        "batched": batched,
+        "speedup_prefill_tok_s": lift_prefill,
+        "speedup_tokens_per_sec": lift_total,
+    }
+
+
 def _run_arch(cfg, artifact: str, tag: str):
     params = M.init_model(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(SEED)
@@ -169,6 +264,9 @@ def _run_arch(cfg, artifact: str, tag: str):
         "serial": serial,
         "continuous": cont,
         "speedup_tokens_per_sec": speedup,
+        # batched multi-request chunked prefill vs the pre-batching
+        # one-chunk-per-jit-call dispatch, long-prompt Poisson workload
+        "prefill": _run_long_prefill(cfg, params, tag),
         "engine_stats": {k: float(v) for k, v in st.items()},
     }
     path = emit_json(artifact, payload)

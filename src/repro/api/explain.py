@@ -176,8 +176,14 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
 
     if serving:
         from repro.models import mixers as MX
+        from repro.serve.engine import check_data_axis_serving
         from repro.serve.paged_kv import StatePool
 
+        # preflight the SAME device-view rule ServeEngine enforces: a
+        # nontrivial data/pod axis miscompiles paged serving (spurious
+        # GSPMD data-axis all-reduce around rope — ROADMAP open item)
+        check_data_axis_serving({a: layout.axis_size(a)
+                                 for a in layout.alias_name})
         scfg = plan.serve_config()
         pcfg = scfg.paged_config(model_dtype=cfg.dtype)
         st_layout = MX.model_state_layout(cfg)   # typed error if unservable

@@ -203,6 +203,11 @@ class HyperPlan:
                             "per-layer streaming fetches host-resident "
                             "weights; enable params_on_host or drop "
                             "stream_layers")
+        if self.serve is not None:
+            # typed ServePlanError for zero/negative serving knobs (e.g. a
+            # prefill_batch of 0 would silently schedule empty chunk
+            # batches) — same check the runtime applies to bare ServeConfigs
+            self.serve.validate()
         if self.rl is not None:
             if self.rl.group_size < 2:
                 raise PlanError(

@@ -9,7 +9,7 @@ CPU-smoke-test variant mandated by the assignment (2 layers, d_model<=512,
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -235,7 +235,12 @@ class ServeConfig:
     max_slots: int = 4                 # decode batch seats (static for jit)
     max_queue: int = 64                # admission control: reject beyond this
     prefill_chunk: int = 32            # chunked-prefill granularity
-    prefill_chunks_per_step: int = 1   # prefill/decode interleave budget
+    prefill_chunks_per_step: int = 4   # prefill/decode interleave budget
+    # rows of the BATCHED prefill step (static for jit): all chunks the
+    # scheduler admits in one iteration run as one jit call, filler rows
+    # padded to the null slot.  With the defaults the per-step budget
+    # never exceeds the row count, so prefill is one call per step.
+    prefill_batch: int = 4
     watermark_blocks: int = 1          # admission headroom for decode growth
     # copy-on-write prompt-prefix sharing
     enable_prefix_cache: bool = True
@@ -243,6 +248,29 @@ class ServeConfig:
 
     def replace(self, **kw) -> "ServeConfig":
         return replace(self, **kw)
+
+    def validate(self) -> "ServeConfig":
+        """Eager knob check; typed ServePlanError BEFORE anything jits.
+
+        Shared by :class:`~repro.api.plan.HyperPlan` validation and the
+        serving runtime (which is reachable without a plan via
+        ``serve_cfg=``), so a zero/negative knob can never surface as a
+        shape error inside jit or a silent empty prefill batch.
+        """
+        from repro.api.errors import ServePlanError
+        problems = []
+        for knob, lo in (("block_size", 1), ("num_blocks", 2),
+                         ("max_blocks_per_req", 1), ("max_slots", 1),
+                         ("max_queue", 1), ("prefill_chunk", 1),
+                         ("prefill_chunks_per_step", 1), ("prefill_batch", 1),
+                         ("watermark_blocks", 0), ("prefix_cache_blocks", 0)):
+            if getattr(self, knob) < lo:
+                problems.append(f"{knob}={getattr(self, knob)} (must be "
+                                f">= {lo})")
+        if problems:
+            raise ServePlanError("invalid ServeConfig: "
+                                 + "; ".join(problems))
+        return self
 
     # The paged-pool and scheduler sub-configs are derived by field name so
     # each knob has one source of truth here; a field added to either

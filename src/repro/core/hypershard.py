@@ -24,8 +24,7 @@ import re
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.layout import Layout, ShardStrategy, layout_for_mesh
 

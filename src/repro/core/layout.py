@@ -26,7 +26,6 @@ import dataclasses
 import math
 from typing import Optional, Sequence, Tuple, Union
 
-import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisRef = Union[str, None, Tuple[str, ...]]

@@ -20,7 +20,6 @@ of one device list, so cluster re-configuration never touches model code.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 

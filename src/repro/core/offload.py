@@ -29,13 +29,12 @@ orchestration":
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 from jax import checkpoint_policies as _cp
 from jax.ad_checkpoint import checkpoint_name
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import NamedSharding
 
 from repro.core.compat import device_memory_kind, host_memory_kind
 

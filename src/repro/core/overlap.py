@@ -12,8 +12,6 @@ matmul), the optimized alternative to the GShard one-hot einsum baseline.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

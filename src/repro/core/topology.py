@@ -8,7 +8,6 @@ matrix physically is.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Tuple
 
 # -- roofline constants (per chip), from the assignment -----------------------

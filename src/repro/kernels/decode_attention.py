@@ -9,7 +9,6 @@ score tensors in f32 in HBM.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

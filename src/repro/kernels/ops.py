@@ -11,11 +11,9 @@ ref path; kernels are validated against the oracles in interpret mode by
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 

@@ -11,7 +11,6 @@ lowers without materialising an (S, S) score matrix.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -23,10 +23,9 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, get_config, list_archs
-from repro.core import hypershard, offload as off, topology
+from repro.core import offload as off, topology
 from repro.core.hypershard import ShardingPlan
 from repro.launch import hlo_stats, specs
 from repro.launch.mesh import make_production_mesh

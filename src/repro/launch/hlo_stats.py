@@ -13,7 +13,6 @@ converted to ring-algorithm wire bytes:
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from typing import Dict

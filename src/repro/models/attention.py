@@ -163,37 +163,67 @@ def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     return y, {"k": k_pool, "v": v_pool}
 
 
-def attn_prefill_paged(p, x, start, limit, cfg, kv, block_table, *,
-                       block_size: int, window: Optional[int] = None):
-    """One chunk of chunked prefill against the paged KV pool.
+def paged_chunk_indices(positions, limits, block_tables, *, block_size: int):
+    """Per-row (block, offset) write targets for a prefill chunk batch.
 
-    x: (1, C, D) — a chunk of one request's prompt, whose first token sits
-    at absolute position ``start`` (traced scalar).  Writes the chunk's
-    K/V into the request's pages, then attends the chunk queries over the
-    full gathered table (history + chunk) with ``q_offset=start`` causal
-    masking — exact chunked prefill.  ``limit`` (traced scalar) is the
-    prompt's true length: chunk rows at positions >= limit are padding —
-    their page writes are routed to the null block and their outputs are
-    the caller's to ignore.  ``block_table``: (W,) this request's table.
-    ``window`` applies the LOCAL_ATTN sliding window to the gathered keys.
+    positions: (P, C) absolute token positions; limits: (P,) each row's
+    true prompt length; block_tables: (P, W).  Rows/columns at positions
+    >= the row's limit are padding — their writes are routed to the null
+    block (block 0), whose contents are never read unmasked.  Returns
+    ``(bidx (P, C), off (P, C), valid (P, C))``.
     """
-    _, C, _ = x.shape
-    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    positions = start + jnp.arange(C)[None, :]               # (1, C)
-    q, k, v = _qkv(p, x, cfg, positions)
-    pos = positions[0]
-    valid = pos < limit
-    bidx = block_table[jnp.where(valid, pos // block_size, 0)]
+    valid = positions < limits[:, None]
+    bidx = jnp.take_along_axis(
+        block_tables, jnp.where(valid, positions // block_size, 0), axis=1)
     bidx = jnp.where(valid, bidx, 0)                         # null block
-    off = jnp.where(valid, pos % block_size, 0)
-    k_pool = kv["k"].at[bidx, off].set(k[0])
-    v_pool = kv["v"].at[bidx, off].set(v[0])
-    W = block_table.shape[0]
-    k_seq = k_pool[block_table].reshape(1, W * block_size, KV, hd)
-    v_seq = v_pool[block_table].reshape(1, W * block_size, KV, hd)
-    out = ops.flash_attention(q, k_seq, v_seq, causal=True, q_offset=start,
-                              window=window)
-    y = out.reshape(1, C, H * hd) @ p["wo"]
+    off = jnp.where(valid, positions % block_size, 0)
+    return bidx, off, valid
+
+
+def flash_rows(q, k, v, starts, *, window=None, scale=None):
+    """Row-wise flash attention with a per-row query offset.
+
+    q: (P, C, H, d); k/v: (P, S, KV, d); starts: (P,) — row ``r``'s
+    queries occupy absolute positions ``starts[r] + [0, C)`` over that
+    row's own gathered keys.  vmap keeps every row's math identical to a
+    standalone ``ops.flash_attention(..., q_offset=start)`` call while the
+    whole chunk batch lowers as ONE fused device computation.
+    """
+    def one(q_r, k_r, v_r, off):
+        return ops.flash_attention(q_r[None], k_r[None], v_r[None],
+                                   causal=True, q_offset=off, window=window,
+                                   scale=scale)[0]
+    return jax.vmap(one)(q, k, v, starts)
+
+
+def attn_prefill_paged(p, x, starts, limits, cfg, kv, block_tables, *,
+                       block_size: int, window: Optional[int] = None):
+    """One batched chunked-prefill step against the paged KV pool.
+
+    x: (P, C, D) — one prompt chunk per row, row ``r``'s first token at
+    absolute position ``starts[r]`` (traced vector).  Writes every row's
+    K/V into its own pages in one scatter, then attends each row's chunk
+    queries over that row's gathered table (history + chunk) with
+    per-row ``q_offset=starts[r]`` causal masking — exact chunked
+    prefill, P requests per kernel launch.  ``limits``: (P,) true prompt
+    lengths — positions >= the limit are padding (null-block writes,
+    outputs ignored); fully-padded rows (limit 0) are scheduler filler.
+    ``block_tables``: (P, W) per-row tables.  ``window`` applies the
+    LOCAL_ATTN sliding window to the gathered keys.
+    """
+    P, C, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = starts[:, None] + jnp.arange(C)[None, :]     # (P, C)
+    q, k, v = _qkv(p, x, cfg, positions)
+    bidx, off, _ = paged_chunk_indices(positions, limits, block_tables,
+                                       block_size=block_size)
+    k_pool = kv["k"].at[bidx, off].set(k)
+    v_pool = kv["v"].at[bidx, off].set(v)
+    W = block_tables.shape[1]
+    k_seq = k_pool[block_tables].reshape(P, W * block_size, KV, hd)
+    v_seq = v_pool[block_tables].reshape(P, W * block_size, KV, hd)
+    out = flash_rows(q, k_seq, v_seq, starts, window=window)
+    y = out.reshape(P, C, H * hd) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 
 

@@ -79,53 +79,75 @@ def init_mamba2_cache(cfg, batch: int, dtype):
     }
 
 
-def mamba2_prefill_chunk(p, x, start, limit, slot, cfg, cache):
-    """One chunked-prefill step over per-slot recurrent state (HyperServe).
+def gather_slot_rows(cache, slots):
+    """Per-row view of the per-slot state for a prefill chunk batch.
 
-    x: (1, C, D) — a chunk whose first token sits at absolute position
-    ``start`` (traced); ``limit`` is the prompt's true length — rows at
-    positions >= ``limit`` are padding and must NOT advance the state, so
-    their ``dt`` is zeroed (decay ``exp(A*0) = 1``, input contribution
-    ``dt * B x = 0``: the recurrence passes through).  ``slot`` (traced)
-    selects which row of the per-slot ``cache`` leaves ((B_slots, ...))
-    seeds the scan and receives the final state; the conv tail is the last
-    ``K-1`` *valid* inputs, sliced at ``limit`` so padding never leaks
-    into the next chunk.
+    ``slots`` (P,) holds each row's decode seat; padding rows carry the
+    out-of-range null seat (== num_slots).  Gathers clamp (padding rows
+    read garbage that is never used); the matching scatter in
+    :func:`scatter_slot_rows` DROPS out-of-range rows, so filler rows can
+    never corrupt a live seat's recurrence — the batched form of the
+    decode step's ``slot_mask`` gating.
+    """
+    n = jax.tree.leaves(cache)[0].shape[0]
+    idx = jnp.clip(slots, 0, n - 1)
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), cache)
+
+
+def scatter_slot_rows(cache, slots, new):
+    return jax.tree.map(
+        lambda a, r: a.at[slots].set(r.astype(a.dtype), mode="drop"),
+        cache, new)
+
+
+def mamba2_prefill_chunk(p, x, starts, limits, slots, cfg, cache):
+    """One batched chunked-prefill step over per-slot state (HyperServe).
+
+    x: (P, C, D) — one prompt chunk per row, row ``r``'s first token at
+    absolute position ``starts[r]`` (traced vector); ``limits[r]`` is the
+    row's true prompt length — positions >= it are padding and must NOT
+    advance the state, so their ``dt`` is zeroed (decay ``exp(A*0) = 1``,
+    input contribution ``dt * B x = 0``: the recurrence passes through).
+    ``slots[r]`` selects which row of the per-slot ``cache`` leaves
+    ((num_slots, ...)) seeds the scan and receives the final state
+    (filler rows carry the null seat and their writes are dropped); each
+    row's conv tail is the last ``K-1`` *valid* inputs, sliced at its
+    ``limit`` so padding never leaks into the next chunk.
     """
     s = cfg.ssm
-    _, C, _ = x.shape
-    st = jax.tree.map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache)
+    P, C, _ = x.shape
+    st = gather_slot_rows(cache, slots)
     z, xbc, dt, di, nh = _split_proj(p, x, cfg)
     K = p["conv_w"].shape[0]
     xp = jnp.concatenate([st["conv"].astype(xbc.dtype), xbc], axis=1)
-    # global position of xp[i] is start - (K-1) + i, so the tail covering
-    # [limit-(K-1), limit) begins at index limit - start (dynamic_slice
-    # clamps: non-final chunks land on the chunk's own last K-1 inputs)
-    conv_tail = jax.lax.dynamic_slice_in_dim(xp, limit - start, K - 1, axis=1)
+    # global position of xp[r, i] is starts[r] - (K-1) + i, so the tail
+    # covering [limit-(K-1), limit) begins at index limit - start
+    # (dynamic_slice clamps: non-final chunks land on the chunk's own
+    # last K-1 inputs)
+    conv_tail = jax.vmap(
+        lambda a, i: jax.lax.dynamic_slice_in_dim(a, i, K - 1, axis=0))(
+            xp, limits - starts)
     xbc, _ = causal_conv1d(xbc, p["conv_w"], cache=st["conv"])
     xbc = jax.nn.silu(xbc)
     xs, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    valid = (start + jnp.arange(C) < limit)[None, :, None]   # (1, C, 1)
+    valid = (starts[:, None] + jnp.arange(C)[None, :]
+             < limits[:, None])[..., None]                   # (P, C, 1)
     dt = dt * valid
     A = -jnp.exp(p["A_log"])
 
-    xh = xs.reshape(1, C, nh, s.head_dim)
+    xh = xs.reshape(P, C, nh, s.head_dim)
     chunk = min(s.chunk_size, C)
     while C % chunk:
         chunk //= 2
     y, fin = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=max(chunk, 1),
                           init_state=st["state"])
     y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
-    y = y.reshape(1, C, di)
+    y = y.reshape(P, C, di)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
     out = y @ p["out_proj"]
-    new = {"state": fin, "conv": conv_tail}
-    cache = jax.tree.map(
-        lambda a, r: jax.lax.dynamic_update_slice_in_dim(
-            a, r.astype(a.dtype), slot, axis=0), cache, new)
-    return out, cache
+    return out, scatter_slot_rows(cache, slots,
+                                  {"state": fin, "conv": conv_tail})
 
 
 def mamba2_decode(p, x, cfg, cache):

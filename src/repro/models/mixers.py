@@ -65,8 +65,11 @@ class MixerSpec:
     #                             dtype) -> one-layer serving-state leaves
     decode_paged: Callable     # (p, h, positions, cfg, state, tables, *,
     #                             block_size, window, slot_mask) -> (y, state)
-    prefill_paged: Callable    # (p, h, start, limit, slot, cfg, state,
-    #                             table, *, block_size, window) -> (y, state)
+    prefill_paged: Callable    # (p, h, starts, limits, slots, cfg, state,
+    #                             tables, *, block_size, window) -> (y, state)
+    #   batched: h (P, C, D); starts/limits/slots (P,) traced vectors;
+    #   tables (P, W) — all scheduled prompt chunks in ONE call, filler
+    #   rows padded to limit 0 / the null slot
 
     def window(self, cfg) -> Optional[int]:
         """Static sliding window this mixer serves under (None = unbounded)."""
@@ -270,10 +273,10 @@ def _attn_decode_paged(p, h, positions, cfg, state, tables, *, block_size,
                                        window=window)
 
 
-def _attn_prefill_paged(p, h, start, limit, slot, cfg, state, table, *,
+def _attn_prefill_paged(p, h, starts, limits, slots, cfg, state, tables, *,
                         block_size, window):
-    return attention.attn_prefill_paged(p["attn"], h, start, limit, cfg,
-                                        state, table, block_size=block_size,
+    return attention.attn_prefill_paged(p["attn"], h, starts, limits, cfg,
+                                        state, tables, block_size=block_size,
                                         window=window)
 
 
@@ -315,9 +318,9 @@ register_mixer(MixerSpec(
         window, slot_mask=None: mla_mod.mla_decode_paged(
             p["attn"], h, positions, cfg, state, tables,
             block_size=block_size),
-    prefill_paged=lambda p, h, start, limit, slot, cfg, state, table, *,
+    prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
         block_size, window: mla_mod.mla_prefill_chunk_paged(
-            p["attn"], h, start, limit, cfg, state, table,
+            p["attn"], h, starts, limits, cfg, state, tables,
             block_size=block_size),
 ))
 
@@ -341,9 +344,9 @@ register_mixer(MixerSpec(
     decode_paged=lambda p, h, positions, cfg, state, tables, *, block_size,
         window, slot_mask=None: _gate_slot_update(
             m2.mamba2_decode(p["mixer"], h, cfg, state), state, slot_mask),
-    prefill_paged=lambda p, h, start, limit, slot, cfg, state, table, *,
+    prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
         block_size, window: m2.mamba2_prefill_chunk(
-            p["mixer"], h, start, limit, slot, cfg, state),
+            p["mixer"], h, starts, limits, slots, cfg, state),
 ))
 
 
@@ -366,7 +369,7 @@ register_mixer(MixerSpec(
     decode_paged=lambda p, h, positions, cfg, state, tables, *, block_size,
         window, slot_mask=None: _gate_slot_update(
             rg_mod.rglru_decode(p["mixer"], h, cfg, state), state, slot_mask),
-    prefill_paged=lambda p, h, start, limit, slot, cfg, state, table, *,
+    prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
         block_size, window: rg_mod.rglru_prefill_chunk(
-            p["mixer"], h, start, limit, slot, cfg, state),
+            p["mixer"], h, starts, limits, slots, cfg, state),
 ))

@@ -11,7 +11,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
 from repro.models.common import apply_rope, dense_init, dtype_of, rms_norm
 
 
@@ -133,43 +132,42 @@ def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     return y, {"ckv": ckv_pool, "krope": krope_pool}
 
 
-def mla_prefill_chunk_paged(p, x, start, limit, cfg, kv, block_table, *,
+def mla_prefill_chunk_paged(p, x, starts, limits, cfg, kv, block_tables, *,
                             block_size: int):
-    """One chunk of chunked prefill against the paged latent pool.
+    """One batched chunked-prefill step against the paged latent pool.
 
-    Mirrors :func:`repro.models.attention.attn_prefill_paged`: the chunk's
-    latents are written to the request's pages (padding rows at positions
-    >= ``limit`` go to the null block), then the chunk queries attend the
-    gathered table in decompressed form — the same flash kernel and scale
-    the dense prefill uses.
+    Mirrors :func:`repro.models.attention.attn_prefill_paged`: every
+    row's latents are written to that row's pages in one scatter (padding
+    positions >= the row's ``limit`` go to the null block), then each
+    row's chunk queries attend its gathered table in decompressed form —
+    the same flash kernel and scale the dense prefill uses, with per-row
+    ``q_offset=starts[r]`` causal masking.
     """
-    m = cfg.mla
-    _, C, _ = x.shape
-    H = cfg.num_heads
-    positions = start + jnp.arange(C)[None, :]               # (1, C)
-    q_nope, q_rope, c_kv, k_rope = _latents(p, x, positions, cfg)
-    pos = positions[0]
-    valid = pos < limit
-    bidx = block_table[jnp.where(valid, pos // block_size, 0)]
-    bidx = jnp.where(valid, bidx, 0)                         # null block
-    off = jnp.where(valid, pos % block_size, 0)
-    ckv_pool = kv["ckv"].at[bidx, off].set(c_kv[0])
-    krope_pool = kv["krope"].at[bidx, off].set(k_rope[0])
-    W = block_table.shape[0]
-    S = W * block_size
-    ckv_seq = ckv_pool[block_table].reshape(1, S, m.kv_lora_rank)
-    krope_seq = krope_pool[block_table].reshape(1, S, m.qk_rope_head_dim)
+    from repro.models.attention import flash_rows, paged_chunk_indices
 
-    k_nope = (ckv_seq @ p["w_uk"]).reshape(1, S, H, m.qk_nope_head_dim)
-    v = (ckv_seq @ p["w_uv"]).reshape(1, S, H, m.v_head_dim)
+    m = cfg.mla
+    P, C, _ = x.shape
+    H = cfg.num_heads
+    positions = starts[:, None] + jnp.arange(C)[None, :]     # (P, C)
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, positions, cfg)
+    bidx, off, _ = paged_chunk_indices(positions, limits, block_tables,
+                                       block_size=block_size)
+    ckv_pool = kv["ckv"].at[bidx, off].set(c_kv)
+    krope_pool = kv["krope"].at[bidx, off].set(k_rope)
+    W = block_tables.shape[1]
+    S = W * block_size
+    ckv_seq = ckv_pool[block_tables].reshape(P, S, m.kv_lora_rank)
+    krope_seq = krope_pool[block_tables].reshape(P, S, m.qk_rope_head_dim)
+
+    k_nope = (ckv_seq @ p["w_uk"]).reshape(P, S, H, m.qk_nope_head_dim)
+    v = (ckv_seq @ p["w_uv"]).reshape(P, S, H, m.v_head_dim)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(krope_seq[:, :, None, :],
-                                  (1, S, H, m.qk_rope_head_dim))], axis=-1)
+                                  (P, S, H, m.qk_rope_head_dim))], axis=-1)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    out = ops.flash_attention(q, k, v, causal=True, q_offset=start,
-                              scale=scale)
-    y = out.reshape(1, C, H * m.v_head_dim) @ p["wo"]
+    out = flash_rows(q, k, v, starts, scale=scale)
+    y = out.reshape(P, C, H * m.v_head_dim) @ p["wo"]
     return y, {"ckv": ckv_pool, "krope": krope_pool}
 
 

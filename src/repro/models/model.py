@@ -261,24 +261,27 @@ def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
     return logits, new_pools
 
 
-def prefill_chunk_paged(params, tokens, start, limit, slot, cfg, kv_pools,
-                        block_table, *, block_size, moe_dispatch="gshard",
-                        with_logits=True):
-    """One chunked-prefill step for a single request (HyperServe).
+def prefill_chunk_paged(params, tokens, starts, limits, slots, cfg, kv_pools,
+                        block_tables, *, block_size, moe_dispatch="gshard"):
+    """One batched chunked-prefill step (HyperServe).
 
-    tokens: (1, C) — the chunk, first token at absolute position ``start``
-    (traced scalar, so one compilation serves every chunk); ``limit`` is
-    the prompt's true length (padding rows never write real pages, and
-    slot-state mixers freeze their recurrent state past it); ``slot``
-    (traced scalar) is the request's decode seat — SSD/RG-LRU sublayers
-    read and update that row of their per-slot state; block_table: (W,)
-    the request's table.  Writes the chunk's K/V into the pool pages and
-    returns (logits (1, C, V_pad), new kv_pools).  Only the prompt's
-    final chunk needs logits (they seed the first sampled token);
-    ``with_logits=False`` skips the unembedding matmul — the dominant
-    per-chunk FLOP for real vocabularies — and returns the final hidden
-    states instead.
+    tokens: (P, C) — every prompt chunk the scheduler admitted this
+    iteration, one request per row, row ``r``'s first token at absolute
+    position ``starts[r]`` (traced vectors, so ONE compilation serves
+    every chunk batch); ``limits``: (P,) true prompt lengths (padding
+    positions never write real pages, and slot-state mixers freeze their
+    recurrent state past them); ``slots``: (P,) each request's decode
+    seat — SSD/RG-LRU sublayers read and update that row of their
+    per-slot state (filler rows carry the out-of-range null seat, whose
+    writes are dropped); block_tables: (P, W) per-row tables.  Writes
+    every row's K/V into the pool pages and returns
+    ``(last_logits (P, V_pad), new kv_pools)`` — the logits of each row's
+    last in-chunk prompt token, the only position whose logits any caller
+    reads (they seed the first sampled token of rows finishing their
+    prompt), so the unembedding matmul — the dominant per-chunk FLOP for
+    real vocabularies — runs over P rows instead of P*C.
     """
+    P, C = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
 
     new_pools = {}
@@ -290,7 +293,7 @@ def prefill_chunk_paged(params, tokens, start, limit, slot, cfg, kv_pools,
                 spec = MX.get_mixer(kd[0])
                 y, kv2 = spec.prefill_paged(
                     sub_p, rms_norm(h, sub_p["norm1"], cfg.norm_eps),
-                    start, limit, slot, cfg, kv, block_table,
+                    starts, limits, slots, cfg, kv, block_tables,
                     block_size=block_size, window=spec.window(cfg))
                 h = h + y
                 h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
@@ -302,10 +305,13 @@ def prefill_chunk_paged(params, tokens, start, limit, slot, cfg, kv_pools,
         new_pools[f"seg{si}"] = seg_kv
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    if not with_logits:
-        return x, new_pools
+    # row r's last in-chunk prompt token sits at chunk index
+    # min(limit, start + C) - 1 - start (clamped for filler rows)
+    last = jnp.clip(jnp.minimum(limits, starts + C) - 1 - starts, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None].astype(jnp.int32),
+                                 axis=1)[:, 0]                # (P, D)
     unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = x @ unembed.T
+    logits = x_last @ unembed.T
     return logits, new_pools
 
 

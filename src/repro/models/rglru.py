@@ -61,36 +61,39 @@ def init_rglru_cache(cfg, batch: int, dtype):
     }
 
 
-def rglru_prefill_chunk(p, x, start, limit, slot, cfg, cache):
-    """One chunked-prefill step over per-slot RG-LRU state (HyperServe).
+def rglru_prefill_chunk(p, x, starts, limits, slots, cfg, cache):
+    """One batched chunked-prefill step over per-slot RG-LRU state.
 
-    x: (1, C, D), first token at absolute position ``start`` (traced);
-    rows at positions >= ``limit`` are padding — their recurrence gate is
-    zeroed, which makes ``a_t = exp(0) = 1`` and ``sqrt(1 - a_t^2) = 0``:
-    the state passes through untouched.  ``slot`` (traced) selects the
-    per-slot state row; the conv tail is sliced at ``limit`` so padding
+    x: (P, C, D) — one prompt chunk per row, row ``r``'s first token at
+    absolute position ``starts[r]`` (traced vector); positions >= the
+    row's ``limit`` are padding — their recurrence gate is zeroed, which
+    makes ``a_t = exp(0) = 1`` and ``sqrt(1 - a_t^2) = 0``: the state
+    passes through untouched.  ``slots[r]`` selects the per-slot state
+    row (filler rows carry the out-of-range null seat; their writes are
+    dropped); each row's conv tail is sliced at its ``limit`` so padding
     inputs never leak into the next chunk.
     """
-    _, C, _ = x.shape
-    st = jax.tree.map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), cache)
+    from repro.models.mamba2 import gather_slot_rows, scatter_slot_rows
+
+    P, C, _ = x.shape
+    st = gather_slot_rows(cache, slots)
     gate = jax.nn.gelu(x @ p["w_gate"])
     xb = x @ p["w_x"]
     K = p["conv_w"].shape[0]
     xp = jnp.concatenate([st["conv"].astype(xb.dtype), xb], axis=1)
-    conv_tail = jax.lax.dynamic_slice_in_dim(xp, limit - start, K - 1, axis=1)
+    conv_tail = jax.vmap(
+        lambda a, i: jax.lax.dynamic_slice_in_dim(a, i, K - 1, axis=0))(
+            xp, limits - starts)
     xb, _ = causal_conv1d(xb, p["conv_w"], cache=st["conv"])
     ig = jax.nn.sigmoid(xb @ p["w_input_gate"])
     ag = jax.nn.sigmoid(xb @ p["w_a_gate"])
-    valid = (start + jnp.arange(C) < limit)[None, :, None]   # (1, C, 1)
+    valid = (starts[:, None] + jnp.arange(C)[None, :]
+             < limits[:, None])[..., None]                   # (P, C, 1)
     ag = ag * valid
     h, fin = ops.rglru_scan(xb, ig, ag, _log_a(p), init_state=st["state"])
     y = (h * gate) @ p["w_out"]
-    new = {"state": fin, "conv": conv_tail}
-    cache = jax.tree.map(
-        lambda a, r: jax.lax.dynamic_update_slice_in_dim(
-            a, r.astype(a.dtype), slot, axis=0), cache, new)
-    return y, cache
+    return y, scatter_slot_rows(cache, slots,
+                                {"state": fin, "conv": conv_tail})
 
 
 def rglru_decode(p, x, cfg, cache):

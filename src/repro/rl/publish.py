@@ -26,7 +26,6 @@ unless the caller asks (``wait=True``, used to measure sync latency).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 

@@ -9,7 +9,6 @@ hierarchical KV pool with host archive (paper's 71K->123K claim).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -132,6 +131,35 @@ def _n(mesh, axes):
 # chunk); positions/starts are traced, so one compilation serves the whole
 # continuous-batching run.
 # ---------------------------------------------------------------------------
+def check_data_axis_serving(axis_sizes) -> None:
+    """Reject paged serving on a mesh with a nontrivial non-model axis.
+
+    Paged serving under a data/pod axis of size > 1 currently MISCOMPILES
+    on the CPU backend: GSPMD inserts a spurious data-axis all-reduce
+    around small-head elementwise ops (rope on a KV-head dim that divides
+    the data axis), doubling K — ``serve/runtime`` outputs silently
+    diverge from ``Generator`` (ROADMAP open item).  Serving is tp-only
+    anyway (the serve leg drops fsdp, and the decode batch is one seat
+    grid, not a data-parallel batch), so a nontrivial data axis buys
+    nothing: raise a typed error pointing at the flat model-only view
+    (``repro.rl.session.serving_mesh_for``) instead of silently
+    diverging.  ``axis_sizes``: mapping of mesh axis name -> size.
+    """
+    from repro.api.errors import ServePlanError
+
+    bad = {a: int(n) for a, n in dict(axis_sizes).items()
+           if a != "model" and int(n) > 1}
+    if bad:
+        raise ServePlanError(
+            f"paged serving needs a model-only device view, but the mesh "
+            f"carries nontrivial non-model ax"
+            f"{'es' if len(bad) > 1 else 'is'} {bad}: under data>1 the CPU "
+            "GSPMD partitioner inserts a spurious data-axis all-reduce "
+            "around the rope/elementwise ops when KV heads divide the data "
+            "axis, doubling K — outputs silently diverge from Generator "
+            "(ROADMAP: data>1 serving miscompile).  Serve on a flat "
+            "(1, n_devices) model-only mesh of the same devices instead "
+            "(repro.rl.session.serving_mesh_for does exactly this).")
 def make_pool_shardings(mesh: Optional[Mesh], pool_tree, plan):
     """NamedShardings for StatePool leaves (paged pools + per-slot state).
 
@@ -193,26 +221,29 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
 
 def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
                             block_size: int, pool_tree=None,
-                            donate: bool = True, with_logits: bool = True,
+                            donate: bool = True,
                             moe_dispatch: str = "gshard"):
-    """Chunked-prefill step for one request: ``(params, tokens (1,C),
-    start, limit, slot, pools, table (W,)) -> (logits (1,C,V), new pools)``.
+    """Batched chunked-prefill step: ``(params, tokens (P,C), starts (P,),
+    limits (P,), slots (P,), pools, tables (P,W)) -> (last_logits (P,V),
+    new pools)``.
 
-    ``slot`` (traced scalar) is the request's decode seat — slot-state
-    mixers (SSD/RG-LRU) carry their recurrence in that row of the pool's
-    per-slot leaves across chunks.  Build one ``with_logits=False``
-    variant for non-final chunks — their logits are discarded, so they
-    can skip the unembedding matmul.
+    Every prompt chunk the scheduler admitted this iteration runs in ONE
+    compiled call — one kernel launch amortised over all P rows instead
+    of a jit dispatch per request.  ``slots`` (traced vector) carries
+    each request's decode seat — slot-state mixers (SSD/RG-LRU) carry
+    their recurrence in those rows of the pool's per-slot leaves across
+    chunks; filler rows are padded to limit 0 / the null slot.  The row
+    count P and chunk width C are fixed by the arrays the caller passes
+    (one compilation per distinct shape).
     """
 
-    def step(params, tokens, start, limit, slot, pools, table):
+    def step(params, tokens, starts, limits, slots, pools, tables):
         ctx = use_mesh(mesh) if mesh is not None else _null()
         with ctx:
-            return M.prefill_chunk_paged(params, tokens, start, limit, slot,
-                                         cfg, pools, table,
+            return M.prefill_chunk_paged(params, tokens, starts, limits,
+                                         slots, cfg, pools, tables,
                                          block_size=block_size,
-                                         moe_dispatch=moe_dispatch,
-                                         with_logits=with_logits)
+                                         moe_dispatch=moe_dispatch)
 
     donate_kw = {"donate_argnums": (5,)} if donate else {}
     if mesh is None:
@@ -222,9 +253,8 @@ def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
     pool_sh = make_pool_shardings(mesh, pool_tree, plan)
     rep = NamedSharding(mesh, P())
     tok_sh = NamedSharding(mesh, P(None, None))
-    tab_sh = NamedSharding(mesh, P(None))
-    out0_sh = (NamedSharding(mesh, P(None, None, "model")) if with_logits
-               else NamedSharding(mesh, P(None, None, None)))
+    tab_sh = NamedSharding(mesh, P(None, None))
+    out0_sh = NamedSharding(mesh, P(None, "model"))
     jitted = jax.jit(step,
                      in_shardings=(param_sh, tok_sh, rep, rep, rep, pool_sh,
                                    tab_sh),

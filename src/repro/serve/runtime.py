@@ -5,7 +5,7 @@ the continuous-batching scheduler (:mod:`repro.serve.scheduler`) and the
 jit'd paged steps (:mod:`repro.serve.engine`) into one iteration:
 
     plan = scheduler.schedule()          # admit / resume / preempt
-    run plan.prefill chunks              # <= budget, so decode never starves
+    run plan.prefill as ONE batched call # <= budget, so decode never starves
     run one decode step for all slots    # every runner advances one token
 
 The decode batch is a fixed set of ``max_slots`` seats — requests are
@@ -88,8 +88,13 @@ class ServeEngine:
         self.prefill_group = prefill_group
         self.decode_group = decode_group
         self.mesh = decode_group.mesh if decode_group is not None else mesh
+        for m in (self.mesh,
+                  prefill_group.mesh if prefill_group is not None else None):
+            if m is not None:
+                E.check_data_axis_serving({a: m.shape[a]
+                                           for a in m.axis_names})
         self.plan, plan_scfg = _resolve_serve_plan(plan, self.mesh)
-        self.scfg = serve_cfg or plan_scfg or ServeConfig()
+        self.scfg = (serve_cfg or plan_scfg or ServeConfig()).validate()
         scfg = self.scfg
         # None -> dropless ragged dispatch for MoE configs (exact greedy
         # serving needs per-token-independent expert application)
@@ -123,15 +128,12 @@ class ServeEngine:
             cfg, self.mesh, self.plan, block_size=scfg.block_size,
             pool_tree=self.pool.state, donate=True, moe_dispatch=moe_dispatch)
         if prefill_group is None:
+            # ONE batched step services every chunk the scheduler admits
+            # per iteration (rows padded to the null slot) — a single jit
+            # dispatch and a single kernel launch per engine step
             self._prefill_step, _ = E.make_paged_prefill_step(
                 cfg, self.mesh, self.plan, block_size=scfg.block_size,
                 pool_tree=self.pool.state, donate=True,
-                moe_dispatch=moe_dispatch)
-            # non-final chunks discard their logits; this variant skips the
-            # unembedding matmul (compiles lazily on first multi-chunk prompt)
-            self._prefill_step_mid, _ = E.make_paged_prefill_step(
-                cfg, self.mesh, self.plan, block_size=scfg.block_size,
-                pool_tree=self.pool.state, donate=True, with_logits=False,
                 moe_dispatch=moe_dispatch)
             self.params = params
             if self.mesh is not None:
@@ -161,6 +163,10 @@ class ServeEngine:
         self.seed = seed
         self.t_start = time.perf_counter()
         self.tokens_generated = 0
+        # batching effectiveness: chunks serviced vs jit calls made — the
+        # whole point of the batched prefill step is chunks >> calls
+        self.prefill_calls = 0
+        self.prefill_chunks = 0
 
     # ------------------------------------------------------------------
     # tier-movement callbacks (scheduler-driven)
@@ -311,59 +317,102 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # prefill execution
     # ------------------------------------------------------------------
-    def _padded_table(self, req: Request) -> np.ndarray:
-        t = np.zeros((self.pcfg.max_blocks_per_req,), np.int32)
-        t[:len(req.table)] = req.table
-        return t
+    def _run_prefill_batch(self, reqs: List[Request]) -> None:
+        """Every scheduled prompt chunk in ONE jit call (<= prefill_batch
+        rows, filler rows padded to limit 0 / the null slot / the null
+        block): a single dispatch and a single kernel launch amortised
+        over the whole batch — raising ``prefill_chunks_per_step`` now
+        buys device-level batching instead of more per-request calls.
 
-    def _run_prefill_chunk(self, req: Request) -> None:
-        if self.prefill_group is not None:
-            self._run_disagg_prefill(req)
-            return
-        bs_chunk = self.scfg.prefill_chunk
-        c0 = req.prefill_done
-        n = min(bs_chunk, req.prompt_len - c0)
-        is_final = c0 + n == req.prompt_len
-        toks = np.zeros((1, bs_chunk), np.int32)
-        toks[0, :n] = req.prompt[c0:c0 + n]
-        step_fn = self._prefill_step if is_final else self._prefill_step_mid
-        logits, self.pool.state = step_fn(
-            self.params, jnp.asarray(toks), jnp.int32(c0),
-            jnp.int32(req.prompt_len), jnp.int32(req.slot), self.pool.state,
-            jnp.asarray(self._padded_table(req)))
-        self.scheduler.on_prefill_chunk(req, n)
-        if is_final:
-            first = self._sample(logits[0, n - 1], req)
-            self.scheduler.on_prompt_complete(req, first)
-            self.tokens_generated += 1
+        The row count is bucketed to the next power of two (1, 2, 4, ...,
+        prefill_batch) and jit compiles one variant per bucket: a lone
+        prefilling request costs a (1, chunk) call, not a fully padded
+        (prefill_batch, chunk) one — padding waste only ever doubles the
+        live rows, while compilations stay O(log prefill_batch).
+        """
+        C = self.scfg.prefill_chunk
+        Pb = 1
+        while Pb < len(reqs):
+            Pb *= 2
+        Pb = min(Pb, self.scfg.prefill_batch)
+        W = self.pcfg.max_blocks_per_req
+        toks = np.zeros((Pb, C), np.int32)
+        starts = np.zeros((Pb,), np.int32)
+        limits = np.zeros((Pb,), np.int32)
+        # filler rows sit in the out-of-range null seat: their slot-state
+        # writes are dropped on device (see models.mamba2.scatter_slot_rows)
+        slots = np.full((Pb,), self.scfg.max_slots, np.int32)
+        tables = np.zeros((Pb, W), np.int32)
+        meta = []
+        for i, req in enumerate(reqs):
+            c0 = req.prefill_done
+            n = min(C, req.prompt_len - c0)
+            toks[i, :n] = req.prompt[c0:c0 + n]
+            starts[i] = c0
+            limits[i] = req.prompt_len
+            slots[i] = req.slot
+            tables[i, :len(req.table)] = req.table
+            meta.append((i, req, n))
+        logits, self.pool.state = self._prefill_step(
+            self.params, jnp.asarray(toks), jnp.asarray(starts),
+            jnp.asarray(limits), jnp.asarray(slots), self.pool.state,
+            jnp.asarray(tables))
+        self.prefill_calls += 1
+        self.prefill_chunks += len(reqs)
+        for i, req, n in meta:
+            self.scheduler.on_prefill_chunk(req, n)
+            if req.prefill_done == req.prompt_len:
+                # the step returns each row's LAST in-chunk prompt-token
+                # logits: exactly what seeds the first sampled token
+                first = self._sample(logits[i], req)
+                self.scheduler.on_prompt_complete(req, first)
+                self.tokens_generated += 1
 
-    def _dense_prefill_fn(self, padded_len: int):
-        if padded_len not in self._dense_prefill:
+    def _dense_prefill_fn(self, batch: int, padded_len: int):
+        key = (batch, padded_len)
+        if key not in self._dense_prefill:
             fn, _ = E.make_prefill_step(self.cfg, self.prefill_group.mesh,
-                                        self.plan, batch=1,
+                                        self.plan, batch=batch,
                                         seq_len=padded_len,
                                         moe_dispatch=self.moe_dispatch)
-            self._dense_prefill[padded_len] = fn
-        return self._dense_prefill[padded_len]
+            self._dense_prefill[key] = fn
+        return self._dense_prefill[key]
 
-    def _run_disagg_prefill(self, req: Request) -> None:
-        """Whole-prompt prefill on the prefill workers, pages to decode."""
-        S = req.prompt_len
-        pad = -S % self.scfg.prefill_chunk
-        toks = np.zeros((1, S + pad), np.int32)
-        toks[0, :S] = req.prompt
+    def _run_disagg_prefill(self, reqs: List[Request]) -> None:
+        """Whole-prompt prefill for all scheduled prompts as ONE dense
+        batch on the prefill workers; each row's pages scatter into the
+        decode workers' pool.  Rows are right-padded to a shared
+        chunk-aligned length — causal attention keeps rows independent,
+        and serving MoE uses the dropless per-token dispatch, so batching
+        rows never changes a row's output.  The batch dim is bucketed to
+        the next power of two (all-zero filler rows are computed and
+        discarded), matching the paged path's compile-count bound: one
+        dense trace per (bucket, padded length), not per exact group
+        size."""
+        S_max = max(r.prompt_len for r in reqs)
+        padded = S_max + (-S_max % self.scfg.prefill_chunk)
+        Pb = 1
+        while Pb < len(reqs):
+            Pb *= 2
+        toks = np.zeros((Pb, padded), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :r.prompt_len] = r.prompt
         task = self.mpmd_sched.submit(
-            self.prefill_group.name, self._dense_prefill_fn(S + pad),
+            self.prefill_group.name, self._dense_prefill_fn(Pb, padded),
             self._params_prefill, jnp.asarray(toks))
         logits, pcaches = task.out
         # hand the KV pages to the decode workers (resharding device_put)
         dst = self.decode_group.sharding()
         pcaches = jax.tree.map(lambda a: jax.device_put(a, dst), pcaches)
-        self.pool.seat_prefill_caches(pcaches, req.table, S)
-        self.scheduler.on_prefill_chunk(req, S - req.prefill_done)
-        first = self._sample(logits[0, S - 1], req)
-        self.scheduler.on_prompt_complete(req, first)
-        self.tokens_generated += 1
+        self.prefill_calls += 1
+        self.prefill_chunks += len(reqs)
+        for i, req in enumerate(reqs):
+            S = req.prompt_len
+            self.pool.seat_prefill_caches(pcaches, req.table, S, row=i)
+            self.scheduler.on_prefill_chunk(req, S - req.prefill_done)
+            first = self._sample(logits[i, S - 1], req)
+            self.scheduler.on_prompt_complete(req, first)
+            self.tokens_generated += 1
 
     # ------------------------------------------------------------------
     # the engine iteration
@@ -378,10 +427,27 @@ class ServeEngine:
             for req in plan.admitted:
                 self.pool.zero_slot(req.slot)
         events: List[Tuple[int, int]] = []
-        for req in plan.prefill:
-            self._run_prefill_chunk(req)
-            if req.generated:
-                events.append((req.rid, req.generated[-1]))
+        if plan.prefill:
+            # all scheduled chunks run in one batched call per group of
+            # prefill_batch rows (== one call per step at the defaults,
+            # where the scheduler budget never exceeds the row count)
+            gsz = self.scfg.prefill_batch
+            if (self.moe_dispatch == "gshard"
+                    and getattr(self.cfg, "moe", None) is not None):
+                # forced GShard capacity dispatch makes a row's output
+                # depend on its batch mates — keep the old one-request
+                # prefills (paged and disagg alike) rather than silently
+                # change outputs with batch composition
+                gsz = 1
+            for i in range(0, len(plan.prefill), gsz):
+                group = plan.prefill[i:i + gsz]
+                if self.prefill_group is not None:
+                    self._run_disagg_prefill(group)
+                else:
+                    self._run_prefill_batch(group)
+            for req in plan.prefill:
+                if req.generated:
+                    events.append((req.rid, req.generated[-1]))
 
         runners = [r for r in plan.decode
                    if r.state is RequestState.RUNNING]
@@ -439,6 +505,8 @@ class ServeEngine:
         s.update({
             "tokens_generated": self.tokens_generated,
             "tokens_per_sec": self.tokens_generated / dt if dt > 0 else 0.0,
+            "prefill_calls": self.prefill_calls,
+            "prefill_chunks": self.prefill_chunks,
             "pool_hbm_bytes": self.pool.hbm_bytes(),
             "archive_host_bytes": self.blocks.archive.nbytes(),
             "prefix_cache_blocks": sum(len(v)

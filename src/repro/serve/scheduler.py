@@ -116,7 +116,11 @@ class SchedulerConfig:
     max_slots: int = 4                 # decode batch width (static for jit)
     max_queue: int = 64                # admission control: beyond this, reject
     prefill_chunk: int = 32            # tokens per chunked-prefill step
-    prefill_chunks_per_step: int = 1   # prefill/decode interleave budget
+    # per-iteration chunk budget: every chunk scheduled here rides ONE
+    # batched jit call in the runtime (StepPlan.prefill is a chunk
+    # *batch*, not a list of per-request dispatches), so a budget > 1 is
+    # the default — it buys device-level batching, not extra launches
+    prefill_chunks_per_step: int = 4
     watermark_blocks: int = 1          # admission headroom for decode growth
 
 

@@ -374,6 +374,196 @@ print("MESH8-MIXER-SERVE-OK")
 """, devices=8, timeout=1200)
 
 
+# ---------------------------------------------------------------------------
+# Batched multi-request chunked prefill: every chunk the scheduler admits
+# in one iteration runs as ONE jit call (prefill_chunks_per_step > 1 is
+# the default).  The engine counts chunks serviced vs calls made, so the
+# tests assert batching actually HAPPENED, not just that outputs match.
+# ---------------------------------------------------------------------------
+_BATCHED_FAMILIES = [
+    ("qwen2-0.5b", {}),                                        # ATTN
+    ("deepseek-v2-lite-16b", {}),                              # MLA (+MoE)
+    ("mamba2-370m", {}),                                       # SSD slot state
+    ("recurrentgemma-2b",
+     {"num_layers": 3, "sliding_window": 16}),                 # RG-LRU+LOCAL
+]
+
+
+@pytest.mark.parametrize("arch,kw", _BATCHED_FAMILIES,
+                         ids=[a for a, _ in _BATCHED_FAMILIES])
+def test_batched_prefill_parity_ragged(arch, kw):
+    """Ragged prompt lengths submitted together: chunks from several
+    requests share one prefill call per step, partial-fill rows padded to
+    the null slot, and greedy outputs stay token-identical to the
+    sequential Generator for every mixer family."""
+    cfg = _family_cfg(arch, **kw)
+    prompts = [list(range(1, 14)), list(range(20, 23)),
+               list(range(30, 39)), list(range(50, 56))]       # 13/3/9/6
+    max_new = [5, 7, 4, 6]
+    scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                       max_slots=4, prefill_chunk=4,
+                       prefill_chunks_per_step=4, prefill_batch=4,
+                       enable_prefix_cache=False)
+    serve = _assert_parity(cfg, scfg, prompts, max_new)
+    eng = serve.engine
+    assert eng.prefill_chunks > eng.prefill_calls, (
+        "prefill chunks never shared a jit call; batching did not engage "
+        f"({eng.prefill_chunks} chunks / {eng.prefill_calls} calls)")
+
+
+@pytest.mark.smoke
+def test_batched_prefill_smoke():
+    """Fast `make check` cover: one paged + one slot-state family through
+    the batched prefill step (ragged lengths, multi-chunk prompts)."""
+    for arch in ("qwen2-0.5b", "mamba2-370m"):
+        cfg = _family_cfg(arch)
+        scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                           max_slots=3, prefill_chunk=4,
+                           prefill_chunks_per_step=3, prefill_batch=3,
+                           enable_prefix_cache=False)
+        serve = _assert_parity(cfg, scfg,
+                               [list(range(1, 11)), list(range(20, 24)),
+                                list(range(40, 47))], [4, 5, 4])
+        assert serve.engine.prefill_chunks > serve.engine.prefill_calls
+
+
+def test_batched_prefill_preemption_mid_batch():
+    """Pool pressure preempts a runner while OTHER requests are still
+    mid-prefill in the same chunk batches; spill/restore keeps outputs
+    exact and the batched step keeps servicing the surviving rows."""
+    cfg = _family_cfg("qwen2-0.5b")
+    prompts = [list(range(1, 10)), list(range(7, 15)), list(range(21, 27))]
+    scfg = ServeConfig(block_size=2, num_blocks=13, max_blocks_per_req=10,
+                       max_slots=3, prefill_chunk=4,
+                       prefill_chunks_per_step=3, prefill_batch=3,
+                       enable_prefix_cache=False)
+    serve = _assert_parity(cfg, scfg, prompts, [8, 8, 8])
+    st = serve.stats()
+    assert st["preemptions"] >= 1, "test must actually exercise preemption"
+    assert st["prefill_chunks"] > st["prefill_calls"], \
+        "prefill batching never engaged under pool pressure"
+
+
+def test_batched_prefill_on_forced_8device_mesh():
+    """The batched prefill step under a sharded 8-device mesh: chunks from
+    several ragged requests per call, outputs identical to the 1-device
+    Generator."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.base import get_config, ServeConfig
+from repro.core.hypershard import ShardingPlan
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+
+mesh = make_host_mesh((1, 8))
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+gen = Generator(cfg, params, max_len=64)
+prompts = [list(range(1, 14)), list(range(20, 23)), list(range(30, 39))]
+want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                     GenerateConfig(max_new_tokens=5))[0, len(p):].tolist()
+        for p in prompts]
+scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                   max_slots=3, prefill_chunk=4, prefill_chunks_per_step=3,
+                   prefill_batch=3, enable_prefix_cache=False)
+serve = HyperServe(cfg, params, serve_cfg=scfg, mesh=mesh,
+                   plan=ShardingPlan(fsdp=None))
+rids = [serve.submit(p, 5) for p in prompts]
+out = serve.join()
+for i, rid in enumerate(rids):
+    assert out[rid] == want[i], (i, out[rid], want[i])
+assert serve.engine.prefill_chunks > serve.engine.prefill_calls
+print("MESH8-BATCHED-PREFILL-OK")
+""", devices=8, timeout=1200)
+
+
+# ---------------------------------------------------------------------------
+# data>1 serving guard (ROADMAP open item): paged serving on a mesh with a
+# nontrivial data axis miscompiles on CPU (spurious GSPMD data-axis
+# all-reduce around rope doubles K) — it must be a typed error, never a
+# silent divergence.
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+def test_explain_rejects_data_parallel_serving():
+    from repro.api import plans
+    from repro.api.errors import ServePlanError
+    from repro.api.explain import explain
+    from repro.core.layout import Layout
+
+    cfg = _family_cfg("qwen2-0.5b")
+    with pytest.raises(ServePlanError, match="data"):
+        explain(plans.serve(), cfg, Layout((2, 2), ("data", "model")),
+                serving=True)
+    # a model-only layout of the same device count explains fine
+    report = explain(plans.serve(), cfg, Layout((1, 4), ("data", "model")),
+                     serving=True)
+    assert report.serve_state
+
+
+@pytest.mark.smoke
+def test_serve_config_knobs_validated():
+    """Zero/negative serving knobs are typed errors before anything jits,
+    via HyperPlan.validate AND the bare-ServeConfig engine path."""
+    from repro.api.errors import ServePlanError
+    from repro.api.plan import HyperPlan
+
+    with pytest.raises(ServePlanError, match="prefill_batch"):
+        HyperPlan(fsdp=None, serve=ServeConfig(prefill_batch=0)).validate()
+    cfg = _family_cfg("qwen2-0.5b")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ServePlanError, match="prefill_chunk"):
+        HyperServe(cfg, params, serve_cfg=ServeConfig(prefill_chunk=0))
+
+
+def test_serve_rejects_data_parallel_mesh_flat_view_serves():
+    """session.serve on a (2, 4) mesh raises the typed guard; the flat
+    model-only view over the SAME devices (serving_mesh_for) serves and
+    matches the 1-device Generator."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.api import Supernode, plans
+from repro.api.errors import ServePlanError
+from repro.configs.base import get_config, ServeConfig
+from repro.models import model as M
+from repro.rl.session import serving_mesh_for
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+session = Supernode((2, 4))
+try:
+    session.serve(cfg, params, plan=plans.serve())
+    raise AssertionError("data>1 serving was not rejected")
+except ServePlanError as e:
+    assert "data" in str(e), e
+try:
+    session.explain(plans.serve(), cfg, for_serving=True)
+    raise AssertionError("explain(for_serving) did not preflight data>1")
+except ServePlanError:
+    pass
+
+# the flat model-only view of the SAME devices serves exactly
+gen = Generator(cfg, params, max_len=64)
+prompt = list(range(1, 10))
+want = gen.generate(jnp.asarray(prompt, jnp.int32)[None, :],
+                    GenerateConfig(max_new_tokens=5))[0, len(prompt):].tolist()
+flat = serving_mesh_for(session.mesh)
+assert dict(zip(flat.axis_names, flat.devices.shape)).get("model") == 8
+serve = HyperServe(cfg, params, mesh=flat, serve_cfg=ServeConfig(
+    block_size=4, num_blocks=48, max_blocks_per_req=8, max_slots=2,
+    prefill_chunk=4))
+rid = serve.submit(prompt, 5)
+out = serve.join()
+assert out[rid] == want, (out[rid], want)
+print("DATA-GUARD-OK")
+""", devices=8, timeout=1200)
+
+
 def test_disagg_rejects_slot_state_models():
     """Disaggregation needs pure paged state; the error names the mixer
     and its state rule.  (Stub groups: the guard fires before any group

@@ -1,13 +1,10 @@
 """HyperShard strategy derivation: rules, fallback, cache shardings."""
 import jax
-import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import get_config
-from repro.core.hypershard import (ShardingPlan, cache_strategy,
-                                   param_strategy, roles_for_path, spec_tree)
+from repro.core.hypershard import ShardingPlan, cache_strategy, param_strategy
 from repro.core.layout import Layout
 
 LAYOUT = Layout((2, 16, 16), ("pod", "data", "model"))
@@ -69,7 +66,6 @@ def test_whole_model_trees_have_valid_specs():
 
 def spec_tree_like(shapes):
     import repro.core.hypershard as hs
-    from repro.launch.mesh import make_production_mesh
     # use layout directly (no devices needed)
     paths, leaves, treedef = hs.tree_paths(shapes)
     specs = [hs.param_strategy(p, tuple(l.shape), LAYOUT, PLAN).partition_spec()

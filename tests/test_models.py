@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import SHAPES, ShapeConfig, get_config, list_archs
+from repro.configs.base import get_config, list_archs
 from repro.models import model as M
 from repro.optim import adamw as opt_mod
 from repro.train import steps as steps_mod

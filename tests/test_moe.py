@@ -4,10 +4,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import MoEConfig, get_config
+from repro.configs.base import get_config
 from repro.models import moe as moe_mod
 
 

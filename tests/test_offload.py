@@ -1,7 +1,6 @@
 """HyperOffload: memory-kind plumbing, streamed layers, analytic HBM model."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import get_config
 from repro.core import offload as off

@@ -1,7 +1,4 @@
 """Chunked-overlap collectives + MoE dispatch variants (multi-device)."""
-import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.core.overlap import overlap_efficiency
 from tests.conftest import run_subprocess

@@ -25,8 +25,7 @@ import pytest
 from repro.api import PlanError, Supernode, plans
 from repro.configs.base import RLConfig, ServeConfig, get_config
 from repro.models import model as M
-from repro.rl import (GRPOLearner, Rollout, RolloutBuffer, RolloutEngine,
-                      group_advantages)
+from repro.rl import Rollout, RolloutBuffer, RolloutEngine, group_advantages
 from repro.serve.engine import GenerateConfig, Generator
 from tests.conftest import run_subprocess
 

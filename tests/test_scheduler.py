@@ -1,7 +1,6 @@
 """Continuous-batching scheduler: admission, interleave, preemption order."""
 from typing import List
 
-import pytest
 
 from repro.serve.paged_kv import BlockManager, PagedKVConfig
 from repro.serve.scheduler import (ContinuousScheduler, RequestState,

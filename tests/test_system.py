@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the HyperParallel system."""
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, ShapeConfig, get_config, list_archs

@@ -1,5 +1,4 @@
 """Training substrate: CE loss, optimizer, trainer loop, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp

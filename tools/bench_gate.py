@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Benchmark regression gate (``make bench-gate``; a CI job runs it).
+
+Re-runs the tiny fixed-seed serve + RL throughput benchmarks and compares
+their RATIO metrics — continuous-vs-serial speedup, the batched-prefill
+lift on the long-prompt workload, the RL rollout speedup — against the
+checked-in ``results/BENCH_*.json`` baselines.  Ratios, not absolute
+tokens/sec: both sides of every ratio run in the same process on the same
+machine, so the metric transfers across hardware while still catching
+real regressions (a per-request prefill dispatch reintroduced, a
+scheduler that stops overlapping, a serialised decode batch).
+
+Fails (exit 1) when a fresh ratio drops more than ``TOLERANCE`` (25%)
+below its baseline.  Fresh artifacts are written under ``--out`` (default
+``results/bench_gate/``) and folded into one ``bench_gate.json`` via
+:mod:`benchmarks.merge_results` for CI artifact upload — the checked-in
+baselines are never overwritten.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+TOLERANCE = 0.25
+
+# (artifact stem, path into the payload, human description).  The two
+# wall-clock ratios are self-normalising (both sides share one process);
+# the prefill-batching gate uses chunks-per-jit-call — a DETERMINISTIC
+# scheduler metric (fixed seed, host-side logic) that pins "all scheduled
+# chunks share one call" without any timing noise at all.
+GATES = (
+    ("BENCH_serve", ("speedup_tokens_per_sec",),
+     "continuous vs serial tok/s (attn)"),
+    ("BENCH_serve", ("prefill", "batched", "chunks_per_call"),
+     "prefill chunks per jit call (attn, long prompts)"),
+    ("BENCH_serve_hybrid", ("speedup_tokens_per_sec",),
+     "continuous vs serial tok/s (hybrid)"),
+    ("BENCH_serve_hybrid", ("prefill", "batched", "chunks_per_call"),
+     "prefill chunks per jit call (hybrid, long prompts)"),
+    ("BENCH_rl", ("speedup_tokens_per_sec",),
+     "continuous vs sequential rollout tok/s"),
+)
+
+
+def _get(payload: dict, path):
+    return functools.reduce(lambda d, k: d[k], path, payload)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(ROOT, "results",
+                                                  "bench_gate"),
+                    help="directory for the fresh artifacts + gate report")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional ratio drop (default 0.25)")
+    args = ap.parse_args(argv)
+
+    stems = sorted({g[0] for g in GATES})
+    baselines = {}
+    for stem in stems:
+        path = os.path.join(ROOT, "results", f"{stem}.json")
+        with open(path) as f:
+            baselines[stem] = json.load(f)
+
+    # redirect every emit_json into the gate directory BEFORE the bench
+    # modules run, so the checked-in baselines stay untouched
+    from benchmarks import common
+    os.makedirs(args.out, exist_ok=True)
+    common.RESULTS_DIR = args.out
+    from benchmarks import rl_throughput, serve_throughput
+    serve_throughput.run()
+    rl_throughput.run()
+
+    fresh = {}
+    for stem in stems:
+        with open(os.path.join(args.out, f"{stem}.json")) as f:
+            fresh[stem] = json.load(f)
+
+    failures = []
+    for stem, path, desc in GATES:
+        base = float(_get(baselines[stem], path))
+        new = float(_get(fresh[stem], path))
+        floor = base * (1.0 - args.tolerance)
+        ok = new >= floor
+        print(f"{'OK  ' if ok else 'FAIL'} {desc}: {new:.2f}x vs baseline "
+              f"{base:.2f}x (floor {floor:.2f}x)")
+        if not ok:
+            failures.append(desc)
+
+    from benchmarks.merge_results import merge
+    merged = merge([os.path.join(args.out, f"{s}.json") for s in stems])
+    merged["gate"] = {
+        "tolerance": args.tolerance,
+        "failures": failures,
+        "checked": [{"artifact": s, "metric": "/".join(p),
+                     "baseline": float(_get(baselines[s], p)),
+                     "fresh": float(_get(fresh[s], p))}
+                    for s, p, _ in GATES],
+    }
+    out_path = os.path.join(args.out, "bench_gate.json")
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True)
+    print(f"{len(GATES) - len(failures)}/{len(GATES)} ratios within "
+          f"{args.tolerance:.0%} of baseline -> {out_path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
