@@ -3,10 +3,12 @@
 # (tools/check_api.py), then run the pytest smoke marker. `make test` is
 # the full tier-1 suite. `make bench-gate` re-runs the tiny fixed-seed
 # throughput benchmarks and fails on a >25% ratio regression against the
-# checked-in results/BENCH_*.json baselines.
+# checked-in results/BENCH_*.json baselines. `make trace-smoke` captures
+# a HyperTrace timeline from a small continuous-batching serve run and
+# writes Perfetto-loadable JSON (CI uploads it as an artifact).
 PY ?= python
 
-.PHONY: check test compile lint bench-gate
+.PHONY: check test compile lint bench-gate trace-smoke
 
 compile:
 	$(PY) -m compileall -q src tools examples benchmarks
@@ -27,3 +29,10 @@ test:
 
 bench-gate:
 	$(PY) tools/bench_gate.py
+
+trace-smoke:
+	mkdir -p results
+	PYTHONPATH=src $(PY) -m repro.launch.serve --arch qwen2-0.5b --reduced \
+		--continuous --requests 4 --prompt-len 8 --max-new 8 \
+		--slots 2 --block-size 8 --num-blocks 64 --prefill-chunk 8 \
+		--trace results/trace_smoke.json --metrics

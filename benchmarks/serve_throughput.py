@@ -202,6 +202,13 @@ def bench_long_prefill(cfg, params, workload, *, batched: bool):
         "prefill_calls": st["prefill_calls"],
         "prefill_chunks": st["prefill_chunks"],
         "chunks_per_call": st["prefill_chunks"] / max(st["prefill_calls"], 1),
+        # the jit compile ledger: distinct (callable, shape key) sightings
+        # for this engine — workload-determined (fixed seeds), so the gate
+        # pins it exactly; growth here means the O(log prefill_batch)
+        # bucketing invariant broke
+        "recompiles": serve.obs().recompiles(),
+        "compiled_keys": {name: [list(k) for k in keys] for name, keys
+                          in serve.obs().compiled_keys().items()},
     })
     return res
 
@@ -230,6 +237,54 @@ def _run_long_prefill(cfg, params, tag: str):
         "batched": batched,
         "speedup_prefill_tok_s": lift_prefill,
         "speedup_tokens_per_sec": lift_total,
+    }
+
+
+COW_PREFIX_LEN = 32                  # 4 full blocks of shared prompt prefix
+COW_N_REQUESTS = 6
+
+
+def _run_cow(cfg, params, tag: str):
+    """Shared-prefix workload through the copy-on-write prefix cache.
+
+    ``COW_N_REQUESTS`` prompts share a 4-block prefix and are drained one
+    at a time, so every request after the first forks the retained prefix
+    blocks instead of re-prefilling them.  All counters are scheduler /
+    BlockManager host logic under fixed seeds — fully deterministic, so
+    the bench gate pins the hit rate with zero tolerance.  Returns None
+    for layouts where prefix forking is unsound (slot state / windowed —
+    the engine auto-disables CoW there).
+    """
+    if not MX.model_state_layout(cfg).pure_paged:
+        return None
+    scfg = ServeConfig(block_size=8, num_blocks=96, max_blocks_per_req=16,
+                       max_slots=4, prefill_chunk=16,
+                       enable_prefix_cache=True, prefix_cache_blocks=32)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    _warmup(serve)
+    hits0 = serve.stats()["prefix_hits"]   # warmup's identical prompts hit
+    rng = np.random.default_rng(SEED + 3)
+    prefix = rng.integers(1, cfg.vocab_size, size=COW_PREFIX_LEN).tolist()
+    for i in range(COW_N_REQUESTS):
+        tail = rng.integers(1, cfg.vocab_size, size=4 + i).tolist()
+        serve.submit(prefix + tail, 4)
+        serve.join()                       # drain so the prefix is retained
+    st = serve.stats()
+    bm = serve.engine.blocks.stats()
+    hits = st["prefix_hits"] - hits0
+    # the first request seeds the cache; every later one can hit
+    hit_rate = hits / max(COW_N_REQUESTS - 1, 1)
+    row(f"serve.{tag}.cow_hit_rate", 0.0,
+        f"{hits}/{COW_N_REQUESTS - 1} shared-prefix forks "
+        f"(hit_rate={hit_rate:.2f}, forked_blocks={bm['forked_blocks']}, "
+        f"cow_faults={bm['cow_faults']})")
+    return {
+        "workload": {"requests": COW_N_REQUESTS,
+                     "prefix_len": COW_PREFIX_LEN, "seed": SEED + 3},
+        "prefix_hits": hits,
+        "hit_rate": hit_rate,
+        "forked_blocks": bm["forked_blocks"],
+        "cow_faults": bm["cow_faults"],
     }
 
 
@@ -267,6 +322,8 @@ def _run_arch(cfg, artifact: str, tag: str):
         # batched multi-request chunked prefill vs the pre-batching
         # one-chunk-per-jit-call dispatch, long-prompt Poisson workload
         "prefill": _run_long_prefill(cfg, params, tag),
+        # copy-on-write prefix sharing (None when the layout forbids it)
+        "cow": _run_cow(cfg, params, tag),
         "engine_stats": {k: float(v) for k, v in st.items()},
     }
     path = emit_json(artifact, payload)

@@ -102,6 +102,14 @@ class Supernode:
         n = len(jax.devices())
         return cls(None) if n == 1 else cls((1, n))
 
+    def obs(self):
+        """The session's HyperTrace hub (lazy; shared by every engine this
+        session builds, so serve/RL/train render as one timeline)."""
+        from repro.obs import Observability
+        if not hasattr(self, "_obs"):
+            self._obs = Observability()
+        return self._obs
+
     # ------------------------------------------------------------------
     @property
     def num_devices(self) -> int:
@@ -164,7 +172,7 @@ class Supernode:
     def scheduler(self, groups: Dict[str, object]):
         """Single-controller MPMD scheduler over the given groups."""
         from repro.core import mpmd
-        return mpmd.MPMDScheduler(groups)
+        return mpmd.MPMDScheduler(groups, obs=self.obs())
 
     # ------------------------------------------------------------------
     # verbs
@@ -188,7 +196,8 @@ class Supernode:
             train_cfg = dataclasses.replace(train_cfg, num_steps=steps)
         return trainer.train(cfg, shape, mesh=self.mesh, plan=hp,
                              adamw=adamw, train_cfg=train_cfg,
-                             moe_dispatch=moe_dispatch, hook=hook)
+                             moe_dispatch=moe_dispatch, hook=hook,
+                             obs=self.obs())
 
     def serve(self, cfg, params, *, plan: Union[None, HyperPlan, object] = None,
               seed: int = 0, moe_dispatch: Optional[str] = None):
@@ -204,7 +213,8 @@ class Supernode:
                           plan=res.plan,
                           prefill_group=groups.get("prefill"),
                           decode_group=groups.get("decode"),
-                          seed=seed, moe_dispatch=moe_dispatch)
+                          seed=seed, moe_dispatch=moe_dispatch,
+                          obs=self.obs())
 
     def rl(self, cfg, *, plan: Union[None, HyperPlan, object] = None,
            params=None, adamw=None, seed: int = 0,
@@ -235,7 +245,7 @@ class Supernode:
         gen = Generator(cfg, params, mesh=self.mesh, plan=res.sharding,
                         max_len=max_len or prompts.shape[1] + max_new_tokens + 8,
                         window_override=window_override,
-                        moe_dispatch=moe_dispatch)
+                        moe_dispatch=moe_dispatch, obs=self.obs())
         return gen.generate(prompts, GenerateConfig(
             max_new_tokens=max_new_tokens, temperature=temperature, seed=seed))
 

@@ -67,6 +67,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--explain", action="store_true",
                     help="print the plan resolution report and exit")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="capture a HyperTrace timeline and write "
+                         "Perfetto/Chrome trace_event JSON here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -78,6 +81,8 @@ def main():
                          "(set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 to try on CPU)")
     session = Supernode.auto()
+    if args.trace:
+        session.obs().trace.enable()
     plan = rl_plan(args)
     try:
         if args.explain:
@@ -114,6 +119,11 @@ def main():
               f"weights v{int(st['weights_version'])}")
     except PlanError as e:
         raise SystemExit(f"{type(e).__name__}: {e}")
+    finally:
+        if args.trace:
+            tr = session.obs().trace
+            print(f"trace: {tr.export(args.trace)} "
+                  f"({len(tr.events())} events, {tr.dropped} dropped)")
 
 
 if __name__ == "__main__":

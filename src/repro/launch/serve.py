@@ -99,6 +99,12 @@ def main():
                     help="prefill/decode role split over device subgroups")
     ap.add_argument("--explain", action="store_true",
                     help="print the serving plan resolution report and exit")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="capture a HyperTrace timeline and write "
+                         "Perfetto/Chrome trace_event JSON here "
+                         "(open at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus metrics dump after the run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -110,6 +116,9 @@ def main():
                          "(set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 to try on CPU)")
     session = Supernode.auto()
+    obs = session.obs()
+    if args.trace:
+        obs.trace.enable()
     try:
         if args.explain:
             # includes one row per serving-state leaf: paged / slot /
@@ -126,6 +135,14 @@ def main():
         # typed validation (ServePlanError et al.): the message already
         # names the offending mixer/rule — surface it without a traceback
         raise SystemExit(f"{type(e).__name__}: {e}")
+    finally:
+        if args.trace:
+            # export validates the payload before writing (assert inside)
+            print(f"trace: {obs.trace.export(args.trace)} "
+                  f"({len(obs.trace.events())} events, "
+                  f"{obs.trace.dropped} dropped)")
+        if args.metrics:
+            print(obs.metrics.dump_prometheus(), end="")
 
 
 if __name__ == "__main__":

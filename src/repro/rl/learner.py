@@ -144,10 +144,12 @@ class GRPOLearner:
                  plan: hypershard.ShardingPlan, *,
                  rl_cfg: Optional[RLConfig] = None, params=None,
                  adamw: Optional[opt_mod.AdamWConfig] = None, seed: int = 0,
-                 moe_dispatch: str = "gshard"):
+                 moe_dispatch: str = "gshard", obs=None):
+        from repro.obs import Observability
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
+        self.obs = obs if obs is not None else Observability()
         self.rl_cfg = rl_cfg or RLConfig()
         adamw = adamw or opt_mod.AdamWConfig(lr=self.rl_cfg.lr,
                                              warmup_steps=0)
@@ -170,15 +172,24 @@ class GRPOLearner:
 
     def update(self, batch) -> dict:
         """One GRPO step over a :meth:`RolloutBuffer.batch` dict."""
-        if self.mesh is not None:
-            batch = {k: jax.device_put(v, self.shardings["batch"][k])
-                     for k, v in batch.items()}
-        else:
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        self.params, self.opt, metrics = self.step_fn(self.params, self.opt,
-                                                      batch)
+        # the batch shape is pad_len_to-bucketed upstream; a NEW shape key
+        # here is a genuine XLA retrace of the GRPO step
+        self.obs.record_compile(
+            "rl_step", tuple(tuple(v.shape) for _, v in sorted(batch.items())))
+        with self.obs.trace.span("rl.update", track="learner",
+                                 rows=len(batch["advantages"])):
+            if self.mesh is not None:
+                batch = {k: jax.device_put(v, self.shardings["batch"][k])
+                         for k, v in batch.items()}
+            else:
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt, metrics = self.step_fn(
+                self.params, self.opt, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
         self.updates += 1
-        return {k: float(v) for k, v in metrics.items()}
+        self.obs.metrics.counter("rl.updates").inc()
+        self.obs.metrics.gauge("rl.loss").set(metrics.get("loss", 0.0))
+        return metrics
 
     def dp_size(self) -> int:
         """Row-divisibility the learner batch must satisfy (dp axes)."""

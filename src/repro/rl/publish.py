@@ -27,6 +27,8 @@ unless the caller asks (``wait=True``, used to measure sync latency).
 from __future__ import annotations
 
 
+import time
+
 import jax
 
 from repro.core import hypershard
@@ -37,10 +39,12 @@ class WeightPublisher:
 
     def __init__(self, engine):
         self.engine = engine
-        self.version = 0                 # installed-weights version
+        self.obs = engine.obs            # publish events land in the
+        self.version = 0                 # engine's own HyperTrace hub
         self.staged_version = 0          # latest published (>= version)
         self._staged = None
         self._staged_prefill = None
+        self._t_staged = 0.0
         if engine.mesh is not None:
             pshapes = jax.eval_shape(lambda p: p, engine.params)
             self._shardings = hypershard.make_param_shardings(
@@ -89,12 +93,18 @@ class WeightPublisher:
         intermediates are never served).
         """
         self.staged_version += 1
-        self._staged = self.reshard(params)
-        if self._prefill_shardings is not None:
-            self._staged_prefill = jax.tree.map(
-                jax.device_put, params, self._prefill_shardings)
-        if wait:
-            jax.block_until_ready(self._staged)
+        self._t_staged = time.perf_counter()
+        with self.obs.trace.span("publish.reshard", track="publish",
+                                 version=self.staged_version):
+            self._staged = self.reshard(params)
+            if self._prefill_shardings is not None:
+                self._staged_prefill = jax.tree.map(
+                    jax.device_put, params, self._prefill_shardings)
+            if wait:
+                jax.block_until_ready(self._staged)
+        self.obs.metrics.counter("rl.publishes").inc()
+        self.obs.trace.instant("publish.stage", track="publish",
+                               version=self.staged_version)
         self.maybe_install()
         return self.staged_version
 
@@ -117,6 +127,14 @@ class WeightPublisher:
             self.engine._params_prefill = self._staged_prefill
         self._staged = self._staged_prefill = None
         self.version = self.staged_version
+        # stage->install gap: how long the newest policy waited for the
+        # in-flight generation to drain (the freshness lag GRPO's
+        # importance ratio has to absorb)
+        self.obs.metrics.histogram("rl.stage_to_install_s").observe(
+            max(time.perf_counter() - self._t_staged, 0.0))
+        self.obs.metrics.gauge("rl.weights_version").set(self.version)
+        self.obs.trace.instant("publish.install", track="publish",
+                               version=self.version)
         # retained CoW prefix pages hold old-weight KV: evict them all
         self.engine._reclaim(self.engine.blocks.num_total)
         return True

@@ -41,12 +41,13 @@ class RolloutGroup:
 class RolloutEngine:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  rl_cfg: Optional[RLConfig] = None, seed: int = 0,
-                 moe_dispatch: Optional[str] = None):
+                 moe_dispatch: Optional[str] = None, obs=None):
         self.cfg = cfg
         self.rl_cfg = rl_cfg or RLConfig()
         self.engine = ServeEngine(cfg, params, serve_cfg=serve_cfg, mesh=mesh,
                                   plan=plan, seed=seed,
-                                  moe_dispatch=moe_dispatch)
+                                  moe_dispatch=moe_dispatch, obs=obs)
+        self.obs = self.engine.obs
         self.publisher = WeightPublisher(self.engine)
         self.groups: Dict[int, RolloutGroup] = {}
         self._gid = itertools.count()

@@ -72,6 +72,10 @@ class RLSession:
         hp.validate(supernode.layout)
         self.cfg = cfg
         self.plan = hp
+        # one HyperTrace hub for the whole session: actor engine, learner
+        # and publisher all report into the supernode's scope, so the RL
+        # iteration renders as one timeline
+        self.obs = supernode.obs()
         self.rl_cfg = hp.rl_config()
         groups = supernode._role_groups(hp)
         if groups and set(groups) != {"actor", "learner"}:
@@ -90,7 +94,8 @@ class RLSession:
         lplan = hp.sharding_plan()
         self.learner = GRPOLearner(cfg, learner_mesh, lplan,
                                    rl_cfg=self.rl_cfg, params=params,
-                                   adamw=adamw, seed=seed, moe_dispatch=md)
+                                   adamw=adamw, seed=seed, moe_dispatch=md,
+                                   obs=self.obs)
         # the actor's serving leg: same declaration minus fsdp (decode
         # cannot amortise per-token weight gathers; the publish path owns
         # the fsdp->serving resharding instead)
@@ -99,11 +104,11 @@ class RLSession:
                                    mesh=actor_mesh,
                                    plan=lplan.replace(fsdp=None),
                                    rl_cfg=self.rl_cfg, seed=seed,
-                                   moe_dispatch=md)
+                                   moe_dispatch=md, obs=self.obs)
         self.sched = None
         if groups:
             from repro.core import mpmd
-            self.sched = mpmd.MPMDScheduler(groups)
+            self.sched = mpmd.MPMDScheduler(groups, obs=self.obs)
         self.buffer = RolloutBuffer(adv_eps=self.rl_cfg.adv_eps)
         self.history: List[Dict[str, float]] = []
 
@@ -117,20 +122,24 @@ class RLSession:
                 reward_fn: RewardFn) -> Dict[str, float]:
         """One rollout -> advantage -> update -> publish cycle."""
         t0 = time.perf_counter()
-        groups = [self.actor.submit_group(p) for p in prompts]
-        self._dispatch("actor", self.actor.drain)
+        with self.obs.trace.span("rl.rollout", track="rl",
+                                 prompts=len(prompts)):
+            groups = [self.actor.submit_group(p) for p in prompts]
+            self._dispatch("actor", self.actor.drain)
         t_roll = time.perf_counter() - t0
 
         self.buffer.clear()
         n_tok = 0
         rewards_all: List[float] = []
-        for g in groups:
-            ros = self.actor.collect(g)
-            rewards = [float(reward_fn(ro.prompt, ro.tokens)) for ro in ros]
-            self.buffer.add_group(ros, rewards)
-            rewards_all += rewards
-            n_tok += sum(len(ro.tokens) for ro in ros)
-            self.actor.release(g)       # bound engine memory on long loops
+        with self.obs.trace.span("rl.evaluate", track="rl"):
+            for g in groups:
+                ros = self.actor.collect(g)
+                rewards = [float(reward_fn(ro.prompt, ro.tokens))
+                           for ro in ros]
+                self.buffer.add_group(ros, rewards)
+                rewards_all += rewards
+                n_tok += sum(len(ro.tokens) for ro in ros)
+                self.actor.release(g)   # bound engine memory on long loops
         # pad_len_to quantises the jit shape so the learner step recompiles
         # only when rollouts genuinely outgrow the previous length bucket,
         # not on every max-length wiggle across iterations
@@ -139,7 +148,9 @@ class RLSession:
 
         metrics = self._dispatch("learner", self.learner.update, batch)
         t_pub = time.perf_counter()
-        self.actor.publish(self.learner.params, wait=True)
+        with self.obs.trace.span("rl.publish", track="rl",
+                                 version=self.actor.version + 1):
+            self.actor.publish(self.learner.params, wait=True)
         metrics.update({
             "reward_mean": sum(rewards_all) / max(len(rewards_all), 1),
             "rollout_tokens": n_tok,
@@ -147,6 +158,11 @@ class RLSession:
             "publish_s": time.perf_counter() - t_pub,
             "weights_version": self.actor.version,
         })
+        m = self.obs.metrics
+        m.counter("rl.iterations").inc()
+        m.counter("rl.rollout_tokens").inc(n_tok)
+        m.gauge("rl.reward_mean").set(metrics["reward_mean"])
+        m.histogram("rl.rollout_s").observe(t_roll)
         self.history.append(metrics)
         return metrics
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from typing import Dict, Iterator, List, Optional, Sequence
 
+from repro.obs import Observability
 from repro.serve.runtime import ServeEngine
 from repro.serve.scheduler import RequestState
 
@@ -32,11 +33,15 @@ class RequestRejected(RuntimeError):
 class HyperServe:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  prefill_group=None, decode_group=None, seed: int = 0,
-                 moe_dispatch=None):
+                 moe_dispatch=None, obs: Optional[Observability] = None):
         self.engine = ServeEngine(cfg, params, serve_cfg=serve_cfg, mesh=mesh,
                                   plan=plan, prefill_group=prefill_group,
                                   decode_group=decode_group, seed=seed,
-                                  moe_dispatch=moe_dispatch)
+                                  moe_dispatch=moe_dispatch, obs=obs)
+
+    def obs(self) -> Observability:
+        """The HyperTrace hub this server reports into."""
+        return self.engine.obs
 
     # -- intake ------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -61,8 +66,16 @@ class HyperServe:
         """Advance the engine one iteration; returns [(rid, token)]."""
         return self.engine.step()
 
-    def stream(self, rid: int, max_steps: int = 100_000) -> Iterator[int]:
-        """Yield ``rid``'s tokens as they are generated, driving the engine."""
+    def stream(self, rid: int, max_steps: int = 100_000,
+               final_meta: bool = False) -> Iterator:
+        """Yield ``rid``'s tokens as they are generated, driving the engine.
+
+        With ``final_meta=True`` one extra item follows the last token: the
+        request's lifecycle record (:meth:`request_meta`) — the pinned
+        ``seed`` and the exact queue-entry / first-token timings the
+        scheduler stamped, so a client can log TTFT without ever seeing
+        engine internals.
+        """
         req = self.engine.scheduler.requests[rid]
         emitted = 0
         steps = 0
@@ -71,11 +84,36 @@ class HyperServe:
                 yield req.generated[emitted]
                 emitted += 1
             if req.done:
+                if final_meta:
+                    yield self.request_meta(rid)
                 return
             self.engine.step()
             steps += 1
             if steps > max_steps:
                 raise RuntimeError(f"stream({rid}) stalled after {steps} steps")
+
+    def request_meta(self, rid: int) -> Dict:
+        """Per-request lifecycle record (exact scheduler-stamped timings)."""
+        req = self.engine.scheduler.requests[rid]
+        return {
+            "rid": req.rid,
+            "seed": req.seed,
+            "state": req.state.value,
+            "n_tokens": len(req.generated),
+            "finish_reason": (
+                None if not req.done
+                else "cancelled" if req.state is RequestState.CANCELLED
+                else "eos" if (req.eos_id is not None and req.generated
+                               and req.generated[-1] == req.eos_id)
+                else "length"),
+            "t_enqueue": req.t_enqueue,
+            "queue_wait_s": (None if req.t_admit is None
+                             else req.t_admit - req.t_enqueue),
+            "ttft_s": (None if req.t_first_token is None
+                       else req.t_first_token - req.t_enqueue),
+            "latency_s": (None if req.t_finish is None
+                          else req.t_finish - req.t_enqueue),
+        }
 
     def join(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
         """Drain every queued/running request; returns {rid: tokens}."""

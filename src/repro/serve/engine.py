@@ -281,10 +281,12 @@ class Generator:
     """Host-side prefill+decode driver."""
 
     def __init__(self, cfg, params, *, mesh=None, plan=None, max_len=512,
-                 window_override=None, moe_dispatch=None):
+                 window_override=None, moe_dispatch=None, obs=None):
+        from repro.obs import Observability
         self.cfg = cfg
         self.params = params
         plan = plan or hypershard.ShardingPlan()
+        self.obs = obs if obs is not None else Observability()
         self.moe_dispatch = resolve_moe_dispatch(cfg, moe_dispatch)
         self.prefill_fn, _ = make_prefill_step(cfg, mesh, plan,
                                                moe_dispatch=self.moe_dispatch)
@@ -300,6 +302,7 @@ class Generator:
                 self.cfg, self.mesh, self.plan, batch=batch,
                 cache_len=self.max_len, window_override=self.window_override,
                 donate=False, moe_dispatch=self.moe_dispatch)
+        self.obs.record_compile("dense_serve", (batch, self.max_len))
         return self._serve[batch]
 
     def generate(self, tokens, gen: GenerateConfig = GenerateConfig()):
@@ -308,7 +311,10 @@ class Generator:
         cfg = self.cfg
         # prefill the prompt, then re-seat the prefill cache into a decode
         # cache of max_len (prefill cache covers S positions)
-        logits, pcaches = self.prefill_fn(self.params, tokens)
+        self.obs.record_compile("dense_prefill", (B, S))
+        with self.obs.trace.span("gen.prefill", track="engine",
+                                 batch=B, seq=S):
+            logits, pcaches = self.prefill_fn(self.params, tokens)
         caches = M.init_caches(cfg, B, self.max_len,
                                window_override=self.window_override)
         caches = _seat(caches, pcaches, S, self.window_override, cfg)
@@ -320,7 +326,8 @@ class Generator:
         out.append(cur)
         for i in range(gen.max_new_tokens - 1):
             pos = jnp.int32(S + i)
-            logits, caches = step_fn(self.params, cur, pos, caches)
+            with self.obs.trace.span("gen.decode", track="engine", pos=S + i):
+                logits, caches = step_fn(self.params, cur, pos, caches)
             lg = logits[:, -1, :cfg.vocab_size]
             if gen.temperature > 0:
                 key, sk = jax.random.split(key)

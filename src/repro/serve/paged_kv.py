@@ -71,6 +71,11 @@ class BlockManager:
         self._free: List[int] = list(range(cfg.num_blocks - 1, 0, -1))
         self._ref = np.zeros((cfg.num_blocks,), np.int32)
         self._ref[self.NULL] = 1                 # never allocatable
+        # CoW accounting (HyperTrace): blocks shared by fork vs pages
+        # physically duplicated on a write fault — the sharing win is
+        # forked_blocks - cow_faults pages never recomputed nor copied
+        self.forked_blocks = 0
+        self.cow_faults = 0
 
     # -- queries -----------------------------------------------------------
     @property
@@ -115,6 +120,7 @@ class BlockManager:
         for b in table:
             if b != self.NULL:
                 self._ref[b] += 1
+                self.forked_blocks += 1
         return list(table)
 
     def is_shared(self, bid: int) -> bool:
@@ -135,6 +141,7 @@ class BlockManager:
         [new] = self.alloc(1)
         copy_page(bid, new)
         self._ref[bid] -= 1                      # old ref released, >=1 remain
+        self.cow_faults += 1
         table = list(table)
         table[idx] = new
         return table, new
@@ -171,6 +178,19 @@ class BlockManager:
 
     def spilled(self, key) -> bool:
         return key in self.archive
+
+    def stats(self) -> dict:
+        """Pool occupancy + CoW accounting snapshot (HyperTrace gauges)."""
+        return {
+            "num_total": self.num_total,
+            "num_free": self.num_free,
+            "occupancy": self.occupancy(),
+            "shared_blocks": int((self._ref[1:] > 1).sum()),
+            "forked_blocks": self.forked_blocks,
+            "cow_faults": self.cow_faults,
+            "archive_entries": len(self.archive.keys()),
+            "archive_bytes": self.archive.nbytes(),
+        }
 
 
 class StatePool:

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import hypershard, mpmd
 from repro.core.kvcache import HostArchive
+from repro.obs import Observability
 from repro.serve import engine as E
 from repro.serve.paged_kv import BlockManager, StatePool
 from repro.serve.scheduler import ContinuousScheduler, Request, RequestState
@@ -79,9 +80,14 @@ class ServeEngine:
     def __init__(self, cfg, params, *, serve_cfg=None, mesh=None, plan=None,
                  prefill_group: Optional[mpmd.ProcessGroup] = None,
                  decode_group: Optional[mpmd.ProcessGroup] = None,
-                 moe_dispatch: Optional[str] = None, seed: int = 0):
+                 moe_dispatch: Optional[str] = None, seed: int = 0,
+                 obs: Optional[Observability] = None):
         from repro.configs.base import ServeConfig
         self.cfg = cfg
+        # HyperTrace hub: sessions thread theirs through (Supernode.obs());
+        # a bare engine gets a private one so per-engine counters and the
+        # jit compile ledger stay clean across engines in one process
+        self.obs = obs if obs is not None else Observability()
         if (prefill_group is None) != (decode_group is None):
             raise ValueError("disaggregation needs BOTH prefill and decode "
                              "groups (or neither)")
@@ -121,7 +127,7 @@ class ServeEngine:
             prefix=self._prefix_lookup, retain=self._retain,
             free_window=self.layout.free_window,
             needs_pages=self.layout.has_paged_state,
-            seed_fn=self._default_seed)
+            seed_fn=self._default_seed, obs=self.obs)
 
         # jit'd units ------------------------------------------------------
         self._decode_step, _ = E.make_paged_serve_step(
@@ -155,7 +161,8 @@ class ServeEngine:
             self._params_prefill = jax.tree.map(jax.device_put, params, psh_p)
             self._dense_prefill = {}          # padded len -> jitted step
         self.mpmd_sched = mpmd.MPMDScheduler(
-            {g.name: g for g in (prefill_group, decode_group) if g is not None})
+            {g.name: g for g in (prefill_group, decode_group)
+             if g is not None}, obs=self.obs)
 
         # prefix cache: token-tuple -> block ids (refs held by the cache)
         self._prefix_cache: "OrderedDict[Tuple[int, ...], List[int]]" = \
@@ -163,6 +170,12 @@ class ServeEngine:
         self.seed = seed
         self.t_start = time.perf_counter()
         self.tokens_generated = 0
+        # interval-rate marks: stats() reports tokens/sec over the window
+        # since the previous stats() call, so the rate no longer decays
+        # across idle gaps between serve() calls (t_start is kept only for
+        # the cumulative view)
+        self._rate_t = self.t_start
+        self._rate_tokens = 0
         # batching effectiveness: chunks serviced vs jit calls made — the
         # whole point of the batched prefill step is chunks >> calls
         self.prefill_calls = 0
@@ -173,12 +186,23 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _spill(self, req: Request) -> None:
         """Archive a preempted request's pages AND its dense slot rows."""
-        if self.layout.has_slot_state:
-            self.blocks.archive.put(req.slot_archive_key,
-                                    self.pool.extract_slot(req.slot))
-        self.blocks.spill(req.archive_key, req.table, self.pool.extract_pages)
+        with self.obs.trace.span("serve.spill", track="engine", rid=req.rid,
+                                 blocks=len(req.table)):
+            if self.layout.has_slot_state:
+                self.blocks.archive.put(req.slot_archive_key,
+                                        self.pool.extract_slot(req.slot))
+            self.blocks.spill(req.archive_key, req.table,
+                              self.pool.extract_pages)
+        self.obs.metrics.counter("serve.spills").inc()
 
     def _restore(self, req: Request) -> List[int]:
+        with self.obs.trace.span("serve.restore", track="engine",
+                                 rid=req.rid):
+            bids = self._restore_inner(req)
+        self.obs.metrics.counter("serve.restores").inc()
+        return bids
+
+    def _restore_inner(self, req: Request) -> List[int]:
         bids = self.blocks.restore(req.archive_key, self.pool.insert_pages)
         # the scheduler seats req.slot before invoking this callback, so
         # the dense slot rows re-seat HERE — atomically with the pages.
@@ -353,12 +377,18 @@ class ServeEngine:
             slots[i] = req.slot
             tables[i, :len(req.table)] = req.table
             meta.append((i, req, n))
-        logits, self.pool.state = self._prefill_step(
-            self.params, jnp.asarray(toks), jnp.asarray(starts),
-            jnp.asarray(limits), jnp.asarray(slots), self.pool.state,
-            jnp.asarray(tables))
+        self.obs.record_compile("paged_prefill", (Pb, C, W))
+        with self.obs.trace.span("serve.prefill", track="engine",
+                                 rows=len(reqs), bucket=Pb,
+                                 rids=[r.rid for r in reqs]):
+            logits, self.pool.state = self._prefill_step(
+                self.params, jnp.asarray(toks), jnp.asarray(starts),
+                jnp.asarray(limits), jnp.asarray(slots), self.pool.state,
+                jnp.asarray(tables))
         self.prefill_calls += 1
         self.prefill_chunks += len(reqs)
+        self.obs.metrics.counter("serve.prefill_calls").inc()
+        self.obs.metrics.counter("serve.prefill_chunks").inc(len(reqs))
         for i, req, n in meta:
             self.scheduler.on_prefill_chunk(req, n)
             if req.prefill_done == req.prompt_len:
@@ -397,15 +427,24 @@ class ServeEngine:
         toks = np.zeros((Pb, padded), np.int32)
         for i, r in enumerate(reqs):
             toks[i, :r.prompt_len] = r.prompt
-        task = self.mpmd_sched.submit(
-            self.prefill_group.name, self._dense_prefill_fn(Pb, padded),
-            self._params_prefill, jnp.asarray(toks))
-        logits, pcaches = task.out
-        # hand the KV pages to the decode workers (resharding device_put)
-        dst = self.decode_group.sharding()
-        pcaches = jax.tree.map(lambda a: jax.device_put(a, dst), pcaches)
+        self.obs.record_compile("dense_prefill", (Pb, padded))
+        with self.obs.trace.span("serve.prefill", track="engine",
+                                 rows=len(reqs), bucket=Pb, padded=padded,
+                                 rids=[r.rid for r in reqs], disagg=True):
+            task = self.mpmd_sched.submit(
+                self.prefill_group.name, self._dense_prefill_fn(Pb, padded),
+                self._params_prefill, jnp.asarray(toks))
+            logits, pcaches = task.out
+            # hand the KV pages to the decode workers (resharding device_put)
+            dst = self.decode_group.sharding()
+            with self.obs.trace.span("serve.kv_transfer", track="engine",
+                                     rows=len(reqs)):
+                pcaches = jax.tree.map(lambda a: jax.device_put(a, dst),
+                                       pcaches)
         self.prefill_calls += 1
         self.prefill_chunks += len(reqs)
+        self.obs.metrics.counter("serve.prefill_calls").inc()
+        self.obs.metrics.counter("serve.prefill_chunks").inc(len(reqs))
         for i, req in enumerate(reqs):
             S = req.prompt_len
             self.pool.seat_prefill_caches(pcaches, req.table, S, row=i)
@@ -463,30 +502,62 @@ class ServeEngine:
                 positions[r.slot] = r.total_len - 1
                 tables[r.slot, :len(r.table)] = r.table
                 slot_mask[r.slot] = True
-            logits, self.pool.state = self._decode_step(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                self.pool.state, jnp.asarray(tables),
-                jnp.asarray(slot_mask))
-            if all(r.temperature <= 0 and not r.capture_logprobs
-                   for r in runners):
-                # batched greedy: one device op + one transfer for the whole
-                # batch instead of a sync per seated slot
-                nxt = np.asarray(jnp.argmax(
-                    logits[:, -1, :self.cfg.vocab_size].astype(jnp.float32),
-                    axis=-1))
-                picks = {r.slot: int(nxt[r.slot]) for r in runners}
-            elif all(r.temperature > 0 for r in runners):
-                # batched stochastic (the RL rollout hot path)
-                picks = self._sample_batch(runners, logits)
-            else:
-                picks = {r.slot: self._sample(logits[r.slot, -1], r)
-                         for r in runners}
+            self.obs.record_compile("paged_decode", (B, W))
+            t_dec = time.perf_counter()
+            with self.obs.trace.span("serve.decode", track="engine",
+                                     runners=len(runners)):
+                logits, self.pool.state = self._decode_step(
+                    self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                    self.pool.state, jnp.asarray(tables),
+                    jnp.asarray(slot_mask))
+                if all(r.temperature <= 0 and not r.capture_logprobs
+                       for r in runners):
+                    # batched greedy: one device op + one transfer for the
+                    # whole batch instead of a sync per seated slot
+                    nxt = np.asarray(jnp.argmax(
+                        logits[:, -1, :self.cfg.vocab_size].astype(
+                            jnp.float32),
+                        axis=-1))
+                    picks = {r.slot: int(nxt[r.slot]) for r in runners}
+                elif all(r.temperature > 0 for r in runners):
+                    # batched stochastic (the RL rollout hot path)
+                    self.obs.record_compile("sampler", (B,))
+                    picks = self._sample_batch(runners, logits)
+                else:
+                    picks = {r.slot: self._sample(logits[r.slot, -1], r)
+                             for r in runners}
+            # one decode step advances every runner one token: the step's
+            # wall time IS each seated request's inter-token latency
+            self.obs.metrics.histogram("serve.itl_s").observe(
+                time.perf_counter() - t_dec)
             for r in runners:
                 tok = picks[r.slot]
                 self.scheduler.on_decode_token(r, tok)
                 self.tokens_generated += 1
                 events.append((r.rid, tok))
+        self._set_gauges()
         return events
+
+    def _set_gauges(self) -> None:
+        """Occupancy snapshot after an engine iteration (pool / archive /
+        prefix-cache byte and block gauges, plus Perfetto counter tracks
+        while a trace is being captured)."""
+        m = self.obs.metrics
+        occ = self.blocks.occupancy()
+        m.gauge("serve.block_occupancy").set(occ)
+        m.gauge("serve.blocks_free").set(self.blocks.num_free)
+        m.gauge("serve.archive_host_bytes").set(self.blocks.archive.nbytes())
+        m.gauge("serve.pool_hbm_bytes").set(self.pool.hbm_bytes())
+        m.gauge("serve.prefix_cache_blocks").set(
+            sum(len(v) for v in self._prefix_cache.values()))
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.counter("block_occupancy", occ, track="pool")
+            tr.counter("archive_bytes", self.blocks.archive.nbytes(),
+                       track="pool")
+            tr.counter("running",
+                       sum(1 for r in self.scheduler.active
+                           if r.state is RequestState.RUNNING), track="pool")
 
     def run_until_complete(self, max_steps: int = 100_000) -> Dict[int, List[int]]:
         steps = 0
@@ -500,16 +571,37 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        dt = time.perf_counter() - self.t_start
+        now = time.perf_counter()
+        # interval rate: tokens since the previous stats() call over the
+        # wall time since that call — an engine idle between serve() calls
+        # reports the rate of the active window, not a decaying average
+        # over its whole lifetime
+        dt_int = now - self._rate_t
+        tok_int = self.tokens_generated - self._rate_tokens
+        self._rate_t = now
+        self._rate_tokens = self.tokens_generated
+        dt_cum = now - self.t_start
+        m = self.obs.metrics
+        ttft = m.histogram("serve.ttft_s")
+        itl = m.histogram("serve.itl_s")
+        qw = m.histogram("serve.queue_wait_s")
         s = self.scheduler.stats()
         s.update({
             "tokens_generated": self.tokens_generated,
-            "tokens_per_sec": self.tokens_generated / dt if dt > 0 else 0.0,
+            "tokens_per_sec": tok_int / dt_int if dt_int > 0 else 0.0,
+            "tokens_per_sec_cumulative":
+                self.tokens_generated / dt_cum if dt_cum > 0 else 0.0,
             "prefill_calls": self.prefill_calls,
             "prefill_chunks": self.prefill_chunks,
             "pool_hbm_bytes": self.pool.hbm_bytes(),
             "archive_host_bytes": self.blocks.archive.nbytes(),
             "prefix_cache_blocks": sum(len(v)
                                        for v in self._prefix_cache.values()),
+            "ttft_p50_s": ttft.percentile(50),
+            "ttft_p95_s": ttft.percentile(95),
+            "itl_p50_s": itl.percentile(50),
+            "itl_p95_s": itl.percentile(95),
+            "queue_wait_p50_s": qw.percentile(50),
+            "recompiles": self.obs.recompiles(),
         })
         return s

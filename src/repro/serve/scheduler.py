@@ -47,6 +47,7 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.obs import Observability
 from repro.serve.paged_kv import BlockManager, NoFreeBlocks, blocks_for
 
 
@@ -73,6 +74,12 @@ class Request:
     # preemption spill/restore (the key depends only on seed + position)
     seed: Optional[int] = None
     capture_logprobs: bool = False            # record sampled-token logprobs
+    # exact lifecycle clocks (HyperTrace): ``arrival`` is caller-overridable
+    # for simulation/victim ordering, ``t_enqueue`` is ALWAYS the wall
+    # instant the request entered the queue — TTFT and queue-wait are
+    # measured, never inferred
+    t_enqueue: float = 0.0
+    t_admit: Optional[float] = None           # first seated (queue-wait end)
     state: RequestState = RequestState.QUEUED
     prefill_done: int = 0                     # prompt tokens already paged in
     generated: List[int] = dataclasses.field(default_factory=list)
@@ -145,8 +152,12 @@ class ContinuousScheduler:
                  free_window: Optional[int] = None,
                  needs_pages: bool = True,
                  seed_fn: Callable[[int], int] = lambda rid: rid,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 obs: Optional[Observability] = None):
         self.cfg = cfg
+        # HyperTrace hub: the runtime passes its own; a bare scheduler
+        # (unit tests) gets a private one so counters stay scoped
+        self.obs = obs if obs is not None else Observability()
         self.blocks = blocks
         self.block_size = block_size
         self.max_blocks_per_req = max_blocks_per_req
@@ -183,13 +194,15 @@ class ContinuousScheduler:
         # uint32 array, and a negative/oversized pinned seed must not be
         # able to crash the engine loop mid-decode (the masked value is
         # what gets recorded, so replays still work)
+        now = self._clock()
         req = Request(rid=rid, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       eos_id=eos_id,
                       seed=(int(seed) & 0x7FFFFFFF) if seed is not None
                       else self._seed_fn(rid),
                       capture_logprobs=capture_logprobs,
-                      arrival=self._clock() if arrival is None else arrival)
+                      t_enqueue=now,
+                      arrival=now if arrival is None else arrival)
         self.requests[req.rid] = req
         need = blocks_for(req.prompt_len + max_new_tokens, self.block_size)
         cannot_fit = self.needs_pages and (
@@ -199,8 +212,14 @@ class ContinuousScheduler:
                 or len(self.queue) >= self.cfg.max_queue):
             req.state = RequestState.REJECTED     # can never (or won't) fit
             self.counters["rejected"] += 1
+            self.obs.metrics.counter("serve.rejected").inc()
+            self.obs.trace.instant("serve.reject", rid=rid,
+                                   prompt_len=req.prompt_len)
             return req
         self.queue.append(req)
+        self.obs.metrics.counter("serve.submitted").inc()
+        self.obs.trace.instant("serve.submit", rid=rid,
+                               prompt_len=req.prompt_len, seed=req.seed)
         return req
 
     def cancel(self, rid: int) -> bool:
@@ -221,6 +240,8 @@ class ContinuousScheduler:
             self.blocks.archive.discard(req.slot_archive_key)
         req.state = RequestState.CANCELLED
         req.t_finish = self._clock()
+        self.obs.metrics.counter("serve.cancelled").inc()
+        self.obs.trace.instant("serve.cancel", rid=rid)
         return True
 
     # -- the per-iteration decision ----------------------------------------
@@ -262,6 +283,8 @@ class ContinuousScheduler:
                 req.state = RequestState.RUNNING
                 self.active.append(req)
                 plan.resumed.append(req)
+                self.obs.metrics.counter("serve.resumed").inc()
+                self.obs.trace.instant("serve.resume", rid=req.rid)
                 continue
             if not req.table and not req.shared_blocks:
                 shared = self._prefix(req)      # CoW prefix-cache fork
@@ -270,6 +293,9 @@ class ContinuousScheduler:
                     req.shared_blocks = len(shared)
                     req.prefill_done = len(shared) * self.block_size
                     self.counters["prefix_hits"] += 1
+                    self.obs.metrics.counter("serve.prefix_hits").inc()
+                    self.obs.trace.instant("serve.prefix_hit", rid=req.rid,
+                                           blocks=len(shared))
             need = (blocks_for(req.prompt_len, self.block_size)
                     - req.shared_blocks) if self.needs_pages else 0
             if not self._ensure_free(need + self.cfg.watermark_blocks):
@@ -280,6 +306,12 @@ class ContinuousScheduler:
             req.state = RequestState.PREFILLING
             self.active.append(req)
             plan.admitted.append(req)
+            req.t_admit = self._clock()
+            wait = req.t_admit - req.t_enqueue
+            self.obs.metrics.histogram("serve.queue_wait_s").observe(
+                max(wait, 0.0))
+            self.obs.trace.instant("serve.admit", rid=req.rid,
+                                   queue_wait_s=wait)
 
     def _plan_prefill(self, plan: StepPlan) -> None:
         budget = self.cfg.prefill_chunks_per_step
@@ -336,6 +368,9 @@ class ContinuousScheduler:
         self.queue.appendleft(req)              # front: oldest-first resume
         plan.preempted.append(req)
         self.counters["preemptions"] += 1
+        self.obs.metrics.counter("serve.preemptions").inc()
+        self.obs.trace.instant("serve.preempt", rid=req.rid,
+                               spilled_blocks=req.spilled_blocks)
 
     def _release(self, req: Request, *, free_blocks: bool = True) -> None:
         if free_blocks and req.table:
@@ -375,16 +410,23 @@ class ContinuousScheduler:
         assert req.prefill_done <= req.prompt_len
         self._window_free(req, req.prefill_done)
 
+    def _note_first_token(self, req: Request) -> None:
+        req.t_first_token = self._clock()
+        ttft = req.t_first_token - req.t_enqueue
+        self.obs.metrics.histogram("serve.ttft_s").observe(max(ttft, 0.0))
+        self.obs.trace.instant("serve.first_token", rid=req.rid,
+                               ttft_s=ttft)
+
     def on_prompt_complete(self, req: Request, first_token: int) -> None:
         req.state = RequestState.RUNNING
-        req.t_first_token = self._clock()
+        self._note_first_token(req)
         req.generated.append(first_token)
         self._maybe_finish(req)
 
     def on_decode_token(self, req: Request, token: int) -> None:
         req.generated.append(token)
         if req.t_first_token is None:
-            req.t_first_token = self._clock()
+            self._note_first_token(req)
         # the next decode step writes + queries at position total_len - 1
         if req.state is RequestState.RUNNING:
             self._window_free(req, req.total_len - 1)
@@ -397,6 +439,12 @@ class ContinuousScheduler:
             self._release(req)
             req.state = RequestState.FINISHED
             req.t_finish = self._clock()
+            self.obs.metrics.counter("serve.finished").inc()
+            self.obs.metrics.histogram("serve.latency_s").observe(
+                max(req.t_finish - req.t_enqueue, 0.0))
+            self.obs.trace.instant("serve.finish", rid=req.rid,
+                                   tokens=len(req.generated),
+                                   reason="eos" if hit_eos else "length")
 
     # -- introspection -----------------------------------------------------
     def has_work(self) -> bool:

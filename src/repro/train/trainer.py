@@ -52,9 +52,11 @@ def train(cfg, shape, *, mesh=None, plan=None, adamw: Optional[AdamWConfig] = No
           train_cfg: TrainConfig = TrainConfig(),
           offload_cfg: Optional[off.OffloadConfig] = None,
           moe_dispatch: str = "gshard",
-          hook: Optional[Callable] = None):
+          hook: Optional[Callable] = None, obs=None):
     """End-to-end training. Returns (params, history)."""
     from repro.core.layout import layout_for_mesh
+    from repro.obs import Observability
+    obs = obs if obs is not None else Observability()
     adamw = adamw or AdamWConfig(total_steps=train_cfg.num_steps)
     splan, ocfg = resolve_train_plan(
         plan, offload_cfg,
@@ -72,19 +74,32 @@ def train(cfg, shape, *, mesh=None, plan=None, adamw: Optional[AdamWConfig] = No
     history = []
     needs_offload = mesh is not None and (ocfg.params_on_host
                                           or ocfg.opt_state_on_host)
+    obs.record_compile("train_step",
+                       (shape.global_batch, shape.seq_len, moe_dispatch))
     t0 = time.perf_counter()
     for i, batch in zip(range(train_cfg.num_steps), loader):
-        if needs_offload:
-            params, opt = steps_mod.fetch_state(params, opt, shardings, ocfg)
-        params, opt, metrics = step_fn(params, opt, batch)
-        if needs_offload:
-            params, opt = steps_mod.offload_state(params, opt, shardings,
-                                                  ocfg)
+        t_step = time.perf_counter()
+        with obs.trace.span("train.step", track="train", step=i + 1):
+            if needs_offload:
+                with obs.trace.span("train.fetch", track="train"):
+                    params, opt = steps_mod.fetch_state(params, opt,
+                                                        shardings, ocfg)
+            params, opt, metrics = step_fn(params, opt, batch)
+            if needs_offload:
+                with obs.trace.span("train.offload", track="train"):
+                    params, opt = steps_mod.offload_state(params, opt,
+                                                          shardings, ocfg)
+        obs.metrics.counter("train.steps").inc()
+        obs.metrics.histogram("train.step_s").observe(
+            time.perf_counter() - t_step)
         if (i + 1) % train_cfg.log_every == 0 or i == 0:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i + 1
             m["wall_s"] = time.perf_counter() - t0
             history.append(m)
+            for k in ("loss", "grad_norm"):
+                if k in m:
+                    obs.metrics.gauge(f"train.{k}").set(m[k])
             if hook:
                 hook(m)
         if train_cfg.ckpt_every and (i + 1) % train_cfg.ckpt_every == 0:

@@ -1,0 +1,308 @@
+"""HyperTrace: tracer/metrics unit contracts + serve-lifecycle timeline.
+
+Unit layer: span nesting and thread-safety of the ring buffer, the
+Perfetto trace_event schema validator (both directions), exact log2
+histogram bucket math, registry typing, the jit compile ledger, and the
+disabled-tracer fast path (``span()`` must hand back the shared no-op).
+
+Integration layer: a forced-preemption HyperServe run must emit the
+exact per-request instant sequence (submit -> admit -> first_token ->
+[preempt -> resume ->] finish) plus spill/restore spans, and
+``ServeAPI.stats()`` / ``stream(final_meta=True)`` must surface the
+percentiles and per-request lifecycle records built on the registry.
+"""
+import dataclasses
+import math
+import threading
+
+import jax
+import pytest
+
+from repro.configs.base import ServeConfig, get_config
+from repro.models import model as M
+from repro.obs import (NOOP_SPAN, SCHEMA, Observability, Tracer,
+                       validate_perfetto)
+from repro.serve.api import HyperServe
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_disabled_tracer_is_noop():
+    tr = Tracer()
+    assert not tr.enabled
+    # the <2% overhead guarantee: one shared object, no allocation
+    assert tr.span("x") is NOOP_SPAN
+    assert tr.span("y", rid=3) is NOOP_SPAN
+    with tr.span("z"):
+        pass
+    tr.instant("i")
+    tr.counter("c", 1.0)
+    assert tr.events() == [] and tr.emitted == 0
+
+
+def test_span_nesting_order_and_containment():
+    tr = Tracer().enable()
+    with tr.span("outer", rid=1):
+        with tr.span("inner"):
+            pass
+    evs = tr.events()
+    # spans are emitted at __exit__, so the inner completes first
+    assert [e["name"] for e in evs] == ["inner", "outer"]
+    inner, outer = evs
+    assert outer["ph"] == inner["ph"] == "X"
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert outer["args"] == {"rid": 1} and "args" not in inner
+
+
+def test_named_tracks_get_stable_tids_and_metadata():
+    tr = Tracer().enable()
+    tr.instant("a", track="actor")
+    tr.instant("b", track="learner")
+    tr.instant("c", track="actor")
+    evs = tr.events()
+    assert evs[0]["tid"] == evs[2]["tid"] != evs[1]["tid"]
+    meta = [e for e in tr.to_perfetto()["traceEvents"] if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta} == {"actor", "learner"}
+
+
+def test_ring_buffer_evicts_oldest_and_counts_drops():
+    tr = Tracer(capacity=4).enable()
+    for i in range(7):
+        tr.instant(f"e{i}")
+    assert tr.emitted == 7 and tr.dropped == 3
+    assert [e["name"] for e in tr.events()] == ["e3", "e4", "e5", "e6"]
+
+
+def test_tracer_thread_safety():
+    tr = Tracer(capacity=1 << 16).enable()
+    n_threads, n_spans = 8, 200
+
+    def worker(t):
+        for i in range(n_spans):
+            with tr.span("work", thread=t, i=i):
+                pass
+            tr.instant("tick", thread=t)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    evs = tr.events()
+    assert len(evs) == tr.emitted == n_threads * n_spans * 2
+    # per-thread event streams survived interleaving intact
+    for t in range(n_threads):
+        mine = [e for e in evs if e.get("args", {}).get("thread") == t]
+        assert len(mine) == n_spans * 2
+    assert validate_perfetto(tr.to_perfetto()) == []
+
+
+def test_perfetto_validator_accepts_exporter_output():
+    tr = Tracer().enable()
+    with tr.span("s", k=1):
+        pass
+    tr.instant("i", track="t")
+    tr.counter("c", 2.5, track="t")
+    assert validate_perfetto(tr.to_perfetto()) == []
+
+
+@pytest.mark.parametrize("payload, needle", [
+    ({}, "traceEvents"),
+    ({"traceEvents": "nope"}, "traceEvents"),
+    ({"traceEvents": [{"ph": "X", "name": "a", "pid": 1, "tid": 1,
+                       "ts": 0.0}]}, "dur"),          # complete without dur
+    ({"traceEvents": [{"ph": "i", "name": "a", "pid": 1, "tid": 1,
+                       "ts": -5.0}]}, "ts"),          # negative timestamp
+    ({"traceEvents": [{"ph": "Z", "name": "a", "pid": 1, "tid": 1,
+                       "ts": 0.0}]}, "ph"),           # unknown phase
+    ({"traceEvents": [{"ph": "M", "name": "thread_name", "pid": 1,
+                       "tid": 1}]}, "args"),          # metadata without args
+])
+def test_perfetto_validator_rejects_bad_payloads(payload, needle):
+    problems = validate_perfetto(payload)
+    assert problems and any(needle in p for p in problems)
+
+
+def test_export_round_trip(tmp_path):
+    import json
+    tr = Tracer().enable()
+    with tr.span("s"):
+        pass
+    path = tr.export(str(tmp_path / "t.json"))
+    loaded = json.load(open(path))
+    assert validate_perfetto(loaded) == []
+    assert loaded["otherData"]["dropped_events"] == 0
+
+
+# --------------------------------------------------------------- metrics
+
+def test_histogram_bucket_boundaries_exact():
+    obs = Observability()
+    h = obs.metrics.histogram("lat", lo_exp=-4, hi_exp=4)
+    # bucket k holds [2^(k-1), 2^k): the power itself opens its bucket
+    i2 = h.bucket_index(2.0)
+    assert h.bucket_bounds(i2) == (2.0, 4.0)
+    just_under = math.nextafter(2.0, 0.0)
+    assert h.bucket_bounds(h.bucket_index(just_under)) == (1.0, 2.0)
+    # underflow / overflow rails
+    assert h.bucket_index(0.0) == 0
+    assert h.bucket_index(2.0 ** -5) == 0
+    assert h.bucket_index(16.0) == len(h.buckets) - 1
+    assert h.bucket_bounds(0) == (0.0, 2.0 ** -4)
+    assert h.bucket_bounds(len(h.buckets) - 1) == (16.0, math.inf)
+    # every interior bucket spans exactly one octave
+    for idx in range(1, len(h.buckets) - 1):
+        lo, hi = h.bucket_bounds(idx)
+        assert hi == 2 * lo
+
+
+def test_histogram_observe_and_percentiles():
+    obs = Observability()
+    h = obs.metrics.histogram("lat", lo_exp=-4, hi_exp=4)
+    vals = [0.5, 0.5, 1.5, 3.0, 3.5, 10.0]
+    for v in vals:
+        h.observe(v)
+    assert h.count == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+    assert h.min == 0.5 and h.max == 10.0
+    assert h.mean == pytest.approx(sum(vals) / len(vals))
+    # percentiles are clamped to the observed range
+    assert h.percentile(0) >= h.min
+    assert h.percentile(100) <= h.max
+    assert h.percentile(50) <= h.percentile(95)
+    empty = obs.metrics.histogram("empty")
+    assert empty.percentile(50) == 0.0
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    obs = Observability()
+    c = obs.metrics.counter("serve.tokens")
+    c.inc(3)
+    assert obs.metrics.counter("serve.tokens") is c
+    with pytest.raises(AssertionError):
+        obs.metrics.gauge("serve.tokens")        # kind mismatch must fail
+    with pytest.raises(AssertionError):
+        c.inc(-1)                                # counters are monotonic
+    j = obs.metrics.to_json()
+    assert j["schema"] == SCHEMA
+    assert j["counters"]["serve.tokens"] == 3.0
+
+
+def test_prometheus_dump_format():
+    obs = Observability()
+    obs.metrics.counter("serve.tokens").inc(5)
+    obs.metrics.gauge("pool.occupancy").set(0.5)
+    h = obs.metrics.histogram("lat.s", lo_exp=-2, hi_exp=2)
+    h.observe(0.5)
+    h.observe(3.0)
+    text = obs.metrics.dump_prometheus()
+    assert "# TYPE serve_tokens counter\nserve_tokens 5.0" in text
+    assert "# TYPE pool_occupancy gauge\npool_occupancy 0.5" in text
+    assert '# TYPE lat_s histogram' in text
+    assert 'lat_s_bucket{le="+Inf"} 2' in text   # cumulative buckets
+    assert "lat_s_sum 3.5" in text and "lat_s_count 2" in text
+
+
+def test_compile_ledger_dedups_keys():
+    obs = Observability()
+    assert obs.record_compile("prefill", (2, 64)) is True
+    assert obs.record_compile("prefill", (2, 64)) is False
+    assert obs.record_compile("prefill", (4, 64)) is True
+    assert obs.record_compile("decode", (4,)) is True
+    assert obs.recompiles() == 3
+    assert obs.compiled_keys("prefill") == [(2, 64), (4, 64)]
+    assert obs.metrics.counter("jit.recompiles.decode").value == 1.0
+
+
+# ---------------------------------------------- serve lifecycle timeline
+
+@pytest.fixture(scope="module")
+def qwen_f32():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _instants_for(events, rid):
+    return [e["name"] for e in events
+            if e["ph"] == "i" and e.get("args", {}).get("rid") == rid]
+
+
+def test_serve_lifecycle_trace_with_preemption(qwen_f32):
+    """The full request timeline, including a forced spill/restore."""
+    cfg, params = qwen_f32
+    scfg = ServeConfig(block_size=2, num_blocks=9, max_blocks_per_req=6,
+                       max_slots=2, prefill_chunk=4,
+                       enable_prefix_cache=False)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    serve.obs().trace.enable()
+    rids = [serve.submit(list(range(1, 5)), 8),
+            serve.submit(list(range(7, 11)), 8)]
+    serve.join()
+    st = serve.stats()
+    assert st["preemptions"] >= 1, "pool must be tight enough to preempt"
+
+    evs = serve.obs().trace.events()
+    seqs = {rid: _instants_for(evs, rid) for rid in rids}
+    # the survivor never leaves the pool; the victim round-trips the host
+    assert sorted(seqs.values()) == sorted([
+        ["serve.submit", "serve.admit", "serve.first_token", "serve.finish"],
+        ["serve.submit", "serve.admit", "serve.first_token",
+         "serve.preempt", "serve.resume", "serve.finish"],
+    ])
+    spans = {e["name"] for e in evs if e["ph"] == "X"}
+    assert {"serve.prefill", "serve.decode",
+            "serve.spill", "serve.restore"} <= spans
+    assert validate_perfetto(serve.obs().trace.to_perfetto()) == []
+
+    # the compile ledger saw exactly one (bucket, shape) key per callable
+    keys = serve.obs().compiled_keys()
+    assert len(keys["paged_prefill"]) == 1
+    assert len(keys["paged_decode"]) == 1
+    assert st["recompiles"] == serve.obs().recompiles() >= 2
+
+
+def test_stats_percentiles_and_interval_rate(qwen_f32):
+    cfg, params = qwen_f32
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=3, prefill_chunk=4)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    serve.submit(list(range(1, 9)), 6)
+    serve.submit(list(range(20, 27)), 4)
+    serve.join()
+    st = serve.stats()
+    assert st["finished"] == 2
+    assert st["tokens_per_sec"] > 0
+    assert st["tokens_per_sec_cumulative"] > 0
+    assert 0 < st["ttft_p50_s"] <= st["ttft_p95_s"]
+    assert 0 < st["itl_p50_s"] <= st["itl_p95_s"]
+    assert st["queue_wait_p50_s"] >= 0
+    # interval semantics: an idle gap reports 0, not a decayed average
+    st2 = serve.stats()
+    assert st2["tokens_per_sec"] == 0.0
+    assert st2["tokens_per_sec_cumulative"] > 0
+    # ... and new work after the gap yields a fresh (undiluted) rate
+    serve.submit(list(range(5, 10)), 4)
+    serve.join()
+    st3 = serve.stats()
+    assert st3["tokens_per_sec"] > 0
+
+
+def test_stream_final_meta_lifecycle_record(qwen_f32):
+    cfg, params = qwen_f32
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=3, prefill_chunk=4)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    rid = serve.submit(list(range(1, 9)), 5, seed=1234)
+    items = list(serve.stream(rid, final_meta=True))
+    meta = items[-1]
+    assert items[:-1] == serve.result(rid)
+    assert meta["rid"] == rid and meta["seed"] == 1234
+    assert meta["n_tokens"] == len(items) - 1
+    assert meta["finish_reason"] in ("eos", "length")
+    assert meta["queue_wait_s"] >= 0
+    assert meta["ttft_s"] >= meta["queue_wait_s"]
+    assert meta["latency_s"] >= meta["ttft_s"]

@@ -11,7 +11,11 @@ real regressions (a per-request prefill dispatch reintroduced, a
 scheduler that stops overlapping, a serialised decode batch).
 
 Fails (exit 1) when a fresh ratio drops more than ``TOLERANCE`` (25%)
-below its baseline.  Fresh artifacts are written under ``--out`` (default
+below its baseline, or when any DETERMINISTIC counter (``DET_GATES``:
+chunks-per-jit-call, the HyperTrace jit recompile ledger, CoW prefix-hit
+accounting) differs from its baseline AT ALL — those are fixed-seed
+host-side decisions with no timing noise, so the tolerance is zero.
+Fresh artifacts are written under ``--out`` (default
 ``results/bench_gate/``) and folded into one ``bench_gate.json`` via
 :mod:`benchmarks.merge_results` for CI artifact upload — the checked-in
 baselines are never overwritten.
@@ -30,22 +34,38 @@ sys.path.insert(0, ROOT)
 
 TOLERANCE = 0.25
 
-# (artifact stem, path into the payload, human description).  The two
-# wall-clock ratios are self-normalising (both sides share one process);
-# the prefill-batching gate uses chunks-per-jit-call — a DETERMINISTIC
-# scheduler metric (fixed seed, host-side logic) that pins "all scheduled
-# chunks share one call" without any timing noise at all.
+# (artifact stem, path into the payload, human description).  The
+# wall-clock ratios are self-normalising (both sides share one process)
+# and carry the 25% tolerance below.
 GATES = (
     ("BENCH_serve", ("speedup_tokens_per_sec",),
      "continuous vs serial tok/s (attn)"),
-    ("BENCH_serve", ("prefill", "batched", "chunks_per_call"),
-     "prefill chunks per jit call (attn, long prompts)"),
     ("BENCH_serve_hybrid", ("speedup_tokens_per_sec",),
      "continuous vs serial tok/s (hybrid)"),
-    ("BENCH_serve_hybrid", ("prefill", "batched", "chunks_per_call"),
-     "prefill chunks per jit call (hybrid, long prompts)"),
     ("BENCH_rl", ("speedup_tokens_per_sec",),
      "continuous vs sequential rollout tok/s"),
+)
+
+# DETERMINISTIC gates: fixed-seed host-side counters (scheduler decisions,
+# the HyperTrace jit compile ledger, CoW prefix-hit accounting) that must
+# match the baseline EXACTLY — any drift in either direction fails.  A
+# higher recompile count means the O(log prefill_batch) bucketing
+# invariant broke; a lower chunks-per-call means per-request dispatch
+# crept back; a changed CoW hit rate means prefix retention/fork logic
+# changed behaviour.
+DET_GATES = (
+    ("BENCH_serve", ("prefill", "batched", "chunks_per_call"),
+     "prefill chunks per jit call (attn, long prompts)"),
+    ("BENCH_serve_hybrid", ("prefill", "batched", "chunks_per_call"),
+     "prefill chunks per jit call (hybrid, long prompts)"),
+    ("BENCH_serve", ("prefill", "batched", "recompiles"),
+     "distinct jit compile keys (attn, batched prefill engine)"),
+    ("BENCH_serve_hybrid", ("prefill", "batched", "recompiles"),
+     "distinct jit compile keys (hybrid, batched prefill engine)"),
+    ("BENCH_serve", ("cow", "hit_rate"),
+     "CoW shared-prefix hit rate (attn)"),
+    ("BENCH_serve", ("cow", "forked_blocks"),
+     "CoW forked block count (attn)"),
 )
 
 
@@ -62,7 +82,7 @@ def main(argv=None) -> int:
                     help="allowed fractional ratio drop (default 0.25)")
     args = ap.parse_args(argv)
 
-    stems = sorted({g[0] for g in GATES})
+    stems = sorted({g[0] for g in GATES + DET_GATES})
     baselines = {}
     for stem in stems:
         path = os.path.join(ROOT, "results", f"{stem}.json")
@@ -94,6 +114,15 @@ def main(argv=None) -> int:
         if not ok:
             failures.append(desc)
 
+    for stem, path, desc in DET_GATES:
+        base = float(_get(baselines[stem], path))
+        new = float(_get(fresh[stem], path))
+        ok = new == base                     # zero tolerance, any drift
+        print(f"{'OK  ' if ok else 'FAIL'} {desc}: {new:g} vs baseline "
+              f"{base:g} (exact)")
+        if not ok:
+            failures.append(desc)
+
     from benchmarks.merge_results import merge
     merged = merge([os.path.join(args.out, f"{s}.json") for s in stems])
     merged["gate"] = {
@@ -101,8 +130,9 @@ def main(argv=None) -> int:
         "failures": failures,
         "checked": [{"artifact": s, "metric": "/".join(p),
                      "baseline": float(_get(baselines[s], p)),
-                     "fresh": float(_get(fresh[s], p))}
-                    for s, p, _ in GATES],
+                     "fresh": float(_get(fresh[s], p)),
+                     "exact": (s, p, d) in DET_GATES}
+                    for s, p, d in GATES + DET_GATES],
     }
     out_path = os.path.join(args.out, "bench_gate.json")
     with open(out_path, "w") as f:

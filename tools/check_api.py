@@ -82,6 +82,74 @@ def check_rl_api(session) -> int:
     return failures
 
 
+# the HyperTrace public surface: every name must exist in repro.obs.__all__
+# AND resolve to a real attribute
+OBS_EXPORTS = ("Observability", "default_obs", "Tracer", "validate_perfetto",
+               "NOOP_SPAN", "MetricsRegistry", "Counter", "Gauge",
+               "Histogram", "SCHEMA")
+
+
+def check_obs_api() -> int:
+    """Gate: repro.obs exports + the tracer/metrics contracts hold.
+
+    Functional, not just nominal: a disabled tracer must hand back the
+    shared no-op span (the <2%% overhead guarantee rides on that), an
+    enabled one must export validate_perfetto-clean JSON, and the log2
+    histogram must honour its exact bucket boundaries.
+    """
+    import repro.obs as obs_mod
+    from repro.obs import Observability, validate_perfetto
+
+    failures = 0
+    missing = [n for n in OBS_EXPORTS
+               if n not in obs_mod.__all__ or not hasattr(obs_mod, n)]
+    if missing:
+        print(f"FAIL obs exports: missing {missing}")
+        failures += 1
+    else:
+        print(f"OK   obs exports: {len(OBS_EXPORTS)} names")
+
+    obs = Observability()
+    if obs.trace.span("x") is not obs_mod.NOOP_SPAN:
+        print("FAIL obs tracer: disabled span() is not the shared no-op")
+        failures += 1
+    else:
+        print("OK   obs tracer: disabled span() is the shared no-op")
+    obs.trace.enable()
+    with obs.trace.span("outer", rid=1):
+        with obs.trace.span("inner"):
+            pass
+    obs.trace.instant("mark", track="t")
+    obs.trace.counter("occ", 0.5, track="t")
+    problems = validate_perfetto(obs.trace.to_perfetto())
+    n_ev = len(obs.trace.events())
+    if problems or n_ev != 4:
+        print(f"FAIL obs perfetto: {n_ev} events, problems={problems}")
+        failures += 1
+    else:
+        print("OK   obs perfetto: 4 events, schema-clean export")
+
+    h = obs.metrics.histogram("lat", lo_exp=-4, hi_exp=4)
+    for v, want in ((2.0, "[2, 4)"), (1.999, "[1, 2)"), (0.0, "underflow"),
+                    (16.0, "overflow")):
+        idx = h.bucket_index(v)
+        lo, hi = h.bucket_bounds(idx)
+        ok = (lo <= v < hi) if hi != float("inf") else v >= lo
+        if not ok:
+            print(f"FAIL obs histogram: {v} -> bucket [{lo}, {hi}) ({want})")
+            failures += 1
+    else:
+        print("OK   obs histogram: log2 bucket boundaries exact")
+    if obs.record_compile("f", (1, 2)) is not True \
+            or obs.record_compile("f", (1, 2)) is not False \
+            or obs.recompiles() != 1:
+        print("FAIL obs compile ledger: first/repeat sighting miscounted")
+        failures += 1
+    else:
+        print("OK   obs compile ledger: dedups shape keys")
+    return failures
+
+
 def check_mixer_registry() -> int:
     """Gate: every mixer kind in configs.base.MIXER_KINDS has a complete
     MixerSpec (all hooks callable + a valid paged/slot/windowed StateSpec).
@@ -162,6 +230,7 @@ def main() -> int:
 
     session = Supernode()
     failures = 0
+    failures += check_obs_api()
     failures += check_mixer_registry()
     failures += check_serve_state(session)
     failures += check_rl_api(session)
