@@ -1,0 +1,249 @@
+"""HyperFabric: mixed-SLO serving vs one shared FCFS engine.
+
+MEASURED, same offered load both times (fixed-seed mixed workload: long
+batch prompts arriving first, short interactive requests trickling in
+behind them):
+
+  - ``fcfs``   — ONE shared HyperServe engine, strict FCFS admission
+                 (every tenant in one queue, the pre-fabric story);
+  - ``fabric`` — the same aggregate capacity carved into 2 replicas
+                 behind the HyperFabric router: the interactive tenant's
+                 4x weighted-fair dispatch jumps its requests over the
+                 batch backlog held at the front door.
+
+Time-to-first-token is recorded twice per request: in **router/engine
+steps** (pure host-side scheduler decisions under fixed seeds — exactly
+reproducible, the bench gate pins the p95s with zero tolerance) and in
+wall seconds (self-normalised ratio, 25% gate tolerance).  The headline
+metric is interactive p95 TTFT: the fabric must beat the shared FCFS
+engine at the same offered load.
+
+A second deterministic sub-run measures prefix-affinity routing: requests
+sharing a warmed system prompt must follow the replica holding the CoW
+blocks — the hit counter is workload-determined and gated exactly.
+
+Artifact: ``results/BENCH_fabric.json``.
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_json, percentile, row
+from repro.api import Supernode, plans
+from repro.configs.base import (FabricConfig, ServeConfig, TenantSpec,
+                                get_config)
+from repro.models import model as M
+from repro.serve.api import HyperServe
+
+ARCH = "qwen2-0.5b"
+SEED = 0
+N_BATCH = 8                          # long prompts, arrive one per tick
+BATCH_PROMPT_RANGE = (40, 81)
+N_INTERACTIVE = 6                    # short prompts, every third tick
+INTERACTIVE_PROMPT_LEN = 8
+INTERACTIVE_TICKS = (4, 7, 10, 13, 16, 19)
+MAX_NEW = 4
+
+AFFINITY_PREFIX_LEN = 32             # 4 full blocks of shared system prompt
+AFFINITY_N_FOLLOW = 5                # requests after the cache is warmed
+
+
+def _workload(cfg):
+    """[(tick, tenant, prompt)] sorted by arrival tick (deterministic)."""
+    rng = np.random.default_rng(SEED)
+    load = []
+    for i in range(N_BATCH):
+        plen = int(rng.integers(*BATCH_PROMPT_RANGE))
+        load.append((i, "bulk",
+                     rng.integers(1, cfg.vocab_size, size=plen).tolist()))
+    for tick in INTERACTIVE_TICKS:
+        load.append((tick, "chat",
+                     rng.integers(1, cfg.vocab_size,
+                                  size=INTERACTIVE_PROMPT_LEN).tolist()))
+    return sorted(load, key=lambda x: (x[0], x[1]))
+
+
+def _shared_cfg():
+    """One engine holding the whole capacity (4 slots, 128 blocks)."""
+    return ServeConfig(block_size=8, num_blocks=128, max_blocks_per_req=16,
+                       max_slots=4, prefill_chunk=16,
+                       enable_prefix_cache=False)
+
+
+def _replica_cfg():
+    """Half the capacity per replica (2 slots, 64 blocks) x 2 replicas."""
+    return ServeConfig(block_size=8, num_blocks=64, max_blocks_per_req=16,
+                       max_slots=2, prefill_chunk=16,
+                       enable_prefix_cache=False)
+
+
+def _warm_engine(serve):
+    """Compile prefill buckets + decode outside the timed window."""
+    scfg = serve.engine.scfg
+    top = min(scfg.prefill_batch, scfg.prefill_chunks_per_step,
+              scfg.max_slots)
+    b = 1
+    while True:
+        for _ in range(b):
+            serve.submit(list(range(1, scfg.prefill_chunk + 5)), 2)
+        serve.join()
+        if b >= top:
+            break
+        b = min(2 * b, top)
+
+
+def _summarise(records):
+    """records: {key: (ttft_steps, ttft_wall_s, tenant)}"""
+    out = {}
+    for tenant in ("chat", "bulk"):
+        steps = [s for s, _, t in records.values() if t == tenant]
+        walls = [w for _, w, t in records.values() if t == tenant]
+        tag = "interactive" if tenant == "chat" else "batch"
+        out[f"{tag}_ttft_p95_steps"] = percentile(steps, 95)
+        out[f"{tag}_ttft_p50_steps"] = percentile(steps, 50)
+        out[f"{tag}_ttft_p95_wall_s"] = percentile(walls, 95)
+    return out
+
+
+def bench_fcfs(cfg, params, load):
+    serve = HyperServe(cfg, params, serve_cfg=_shared_cfg())
+    _warm_engine(serve)
+    records = {}
+    submit_at = {}
+    rid_tenant = {}
+    tick = 0
+    i = 0
+    while i < len(load) or serve.engine.scheduler.has_work():
+        while i < len(load) and load[i][0] <= tick:
+            _, tenant, prompt = load[i]
+            rid = serve.submit(prompt, MAX_NEW)
+            submit_at[rid] = (tick, time.perf_counter())
+            rid_tenant[rid] = tenant
+            i += 1
+        for rid, _tok in serve.step_once():
+            if rid not in records:
+                t0_tick, t0 = submit_at[rid]
+                records[rid] = (tick + 1 - t0_tick,
+                                time.perf_counter() - t0, rid_tenant[rid])
+        tick += 1
+    res = _summarise(records)
+    res["total_steps"] = tick
+    return res
+
+
+def bench_fabric(cfg, params, load):
+    session = Supernode()
+    fcfg = FabricConfig(
+        replicas=2, dispatch_depth=1, affinity=False,
+        tenants=(TenantSpec("chat", slo="interactive"),
+                 TenantSpec("bulk", slo="batch")))
+    fab = session.fabric(cfg, params,
+                         plan=plans.fabric(serve=_replica_cfg(), fabric=fcfg))
+    for rep in fab.replicas:
+        _warm_engine(rep)
+    records = {}
+    submit_at = {}
+    fid_tenant = {}
+    tick = 0
+    i = 0
+    while (i < len(load) or fab._pending_total()
+           or any(r.engine.scheduler.has_work() for r in fab.replicas)):
+        while i < len(load) and load[i][0] <= tick:
+            _, tenant, prompt = load[i]
+            fid = fab.submit(prompt, MAX_NEW, tenant=tenant)
+            submit_at[fid] = (tick, time.perf_counter())
+            fid_tenant[fid] = tenant
+            i += 1
+        for fid, _tok in fab.step():
+            if fid not in records:
+                t0_tick, t0 = submit_at[fid]
+                records[fid] = (tick + 1 - t0_tick,
+                                time.perf_counter() - t0, fid_tenant[fid])
+        tick += 1
+    res = _summarise(records)
+    res["total_steps"] = tick
+    res["dispatch_order"] = [t for _, t, _ in fab.dispatch_log]
+    return res
+
+
+def bench_affinity(cfg, params):
+    """Deterministic prefix-affinity sub-run: warm one replica's CoW cache,
+    then every follow-up sharing the system prompt must route to it."""
+    session = Supernode()
+    scfg = _replica_cfg().replace(enable_prefix_cache=True,
+                                  prefix_cache_blocks=16)
+    fab = session.fabric(cfg, params, plan=plans.fabric(
+        serve=scfg, fabric=FabricConfig(replicas=2)))
+    rng = np.random.default_rng(SEED + 1)
+    system = rng.integers(1, cfg.vocab_size,
+                          size=AFFINITY_PREFIX_LEN).tolist()
+    warm = fab.submit(system + [11, 13], MAX_NEW)
+    fab.join()                               # replica retains the prefix
+    followers = []
+    for i in range(AFFINITY_N_FOLLOW):
+        tail = rng.integers(1, cfg.vocab_size, size=3 + i).tolist()
+        followers.append(fab.submit(system + tail, MAX_NEW))
+        fab.join()
+    st = fab.stats()
+    home = fab.request_meta(warm)["replica"]
+    on_home = sum(1 for f in followers
+                  if fab.request_meta(f)["replica"] == home)
+    return {
+        "followers": AFFINITY_N_FOLLOW,
+        "hits": st["affinity_hits"],
+        "hit_rate": st["affinity_hits"] / AFFINITY_N_FOLLOW,
+        "routed_to_holder": on_home,
+        "engine_prefix_hits": fab.replicas[home].stats()["prefix_hits"],
+    }
+
+
+def run():
+    cfg = get_config(ARCH).reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    load = _workload(cfg)
+
+    fcfs = bench_fcfs(cfg, params, load)
+    fabric = bench_fabric(cfg, params, load)
+    speedup_steps = (fcfs["interactive_ttft_p95_steps"]
+                     / max(fabric["interactive_ttft_p95_steps"], 1e-9))
+    speedup_wall = (fcfs["interactive_ttft_p95_wall_s"]
+                    / max(fabric["interactive_ttft_p95_wall_s"], 1e-9))
+    affinity = bench_affinity(cfg, params)
+
+    row("fabric.interactive_ttft_p95", 0.0,
+        f"{fabric['interactive_ttft_p95_steps']:.0f} steps under fabric vs "
+        f"{fcfs['interactive_ttft_p95_steps']:.0f} shared-FCFS "
+        f"-> {speedup_steps:.2f}x (wall {speedup_wall:.2f}x)")
+    row("fabric.affinity", 0.0,
+        f"{affinity['hits']}/{affinity['followers']} shared-prefix requests "
+        f"routed to the CoW holder (hit_rate={affinity['hit_rate']:.2f})")
+
+    payload = {
+        "arch": cfg.name,
+        "workload": {
+            "batch_requests": N_BATCH,
+            "batch_prompt_range": list(BATCH_PROMPT_RANGE),
+            "interactive_requests": N_INTERACTIVE,
+            "interactive_ticks": list(INTERACTIVE_TICKS),
+            "max_new": MAX_NEW,
+            "seed": SEED,
+        },
+        "fcfs": fcfs,
+        "fabric": fabric,
+        "ttft": {
+            "fcfs_interactive_p95_steps": fcfs["interactive_ttft_p95_steps"],
+            "fabric_interactive_p95_steps":
+                fabric["interactive_ttft_p95_steps"],
+            "speedup_p95_steps": speedup_steps,
+            "speedup_p95_wall": speedup_wall,
+        },
+        "affinity": affinity,
+    }
+    path = emit_json("BENCH_fabric.json", payload)
+    row("fabric.artifact", 0.0, path)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -7,10 +7,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (hypershard_derive, kernels_bench, mpmd_bubbles,
-                            mpmd_overlap, mpmd_rl, offload_serve,
-                            offload_train, rl_throughput, roofline,
-                            serve_throughput)
+    from benchmarks import (fabric_throughput, hypershard_derive,
+                            kernels_bench, mpmd_bubbles, mpmd_overlap,
+                            mpmd_rl, offload_serve, offload_train,
+                            rl_throughput, roofline, serve_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("offload_train (paper §3.2 training)", offload_train),
@@ -22,6 +22,8 @@ def main() -> None:
         ("mpmd_rl (paper §3.3c analytic)", mpmd_rl),
         ("rl_throughput (HyperRL rollouts + weight publication)",
          rl_throughput),
+        ("fabric_throughput (HyperFabric multi-tenant SLO serving)",
+         fabric_throughput),
         ("hypershard (paper §3.4)", hypershard_derive),
         ("kernels", kernels_bench),
         ("roofline (deliverable g)", roofline),

@@ -11,6 +11,7 @@ Hierarchy::
       +-- IndivisibleError        a dim would silently replicate (strict mode)
       +-- HostMemoryError         host offload on a backend without a host tier
       +-- ServePlanError          plan is invalid for the serving runtime
+      +-- FabricPlanError         multi-tenant fabric leg cannot be realised
       +-- TopologyError           session topology cannot be realised
 """
 from __future__ import annotations
@@ -34,6 +35,10 @@ class HostMemoryError(PlanError):
 
 class ServePlanError(PlanError):
     """The plan cannot drive the serving runtime (e.g. fsdp-sharded weights)."""
+
+
+class FabricPlanError(PlanError):
+    """The multi-tenant fabric leg is malformed (replicas/split/tenants)."""
 
 
 class TopologyError(PlanError):

@@ -207,5 +207,40 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
                         "state", path, tuple(leaf.shape),
                         strat.partition_spec(), kind_desc, note, fbs))
 
+    if plan.fabric is not None:
+        leaves.extend(_fabric_rows(plan, layout))
+
     return PlanReport(plan, getattr(cfg, "name", str(cfg)), layout,
                       tuple(leaves))
+
+
+def _fabric_rows(plan: HyperPlan, layout: Layout):
+    """One row per fabric replica (the replica->submesh carve) and one per
+    tenant (SLO class + effective dispatch weight)."""
+    from repro.fabric.carve import carve_counts, describe_carve
+    from repro.fabric.router import SLO_POLICY
+
+    fcfg = plan.fabric_config()
+    n_dev = 1
+    for a in layout.alias_name:
+        n_dev *= layout.axis_size(a)
+    counts = carve_counts(n_dev, fcfg)
+    if fcfg.split:
+        rule = "carve: explicit split"
+    elif all(c == 0 for c in counts):
+        rule = "carve: colocated (fewer devices than replicas)"
+    else:
+        rule = "carve: even split"
+    rows = []
+    for (label, devs), c in zip(describe_carve(counts), counts):
+        rows.append(LeafReport(
+            "fabric", label, (1, max(c, 1)), devs,
+            "colocated" if c == 0 else "submesh", rule, ()))
+    for t in fcfg.tenants:
+        weight = t.weight or SLO_POLICY[t.slo]["weight"]
+        rows.append(LeafReport(
+            "fabric", f"tenant[{t.name}]", (), f"slo={t.slo}", "frontdoor",
+            f"weighted-fair: weight={weight}"
+            + (f", max_inflight={t.max_inflight}" if t.max_inflight else ""),
+            ()))
+    return rows

@@ -32,7 +32,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
 from repro.api.errors import (HostMemoryError, PlanError, UnknownAxisError)
-from repro.configs.base import RLConfig, ServeConfig
+from repro.configs.base import FabricConfig, RLConfig, ServeConfig
 from repro.core.hypershard import ShardingPlan
 from repro.core.layout import Layout
 from repro.core.offload import OffloadConfig
@@ -74,6 +74,10 @@ class HyperPlan:
     # the sharding axes above describe the LEARNER; the actor's serving leg
     # is derived (fsdp dropped — see serve/runtime._resolve_serve_plan)
     rl: Optional[RLConfig] = None          # rollout + GRPO update knobs
+    # -- multi-tenant fabric intent (serving tier above HyperServe) --------
+    # replica carve + SLO classes; the fabric owns the submesh split, so a
+    # plan may set EITHER fabric or roles, never both
+    fabric: Optional[FabricConfig] = None  # router + replica carve knobs
     # -- MPMD role intent (paper Listing 1) --------------------------------
     # ((name, device_count), ...); count 0 = auto-balance the remainder
     roles: Tuple[Tuple[str, int], ...] = ()
@@ -166,6 +170,9 @@ class HyperPlan:
     def rl_config(self) -> RLConfig:
         return self.rl if self.rl is not None else RLConfig()
 
+    def fabric_config(self) -> FabricConfig:
+        return self.fabric if self.fabric is not None else FabricConfig()
+
     def roles_dict(self) -> Dict[str, int]:
         return dict(self.roles)
 
@@ -229,6 +236,16 @@ class HyperPlan:
                 raise PlanError(
                     f"an RL plan's roles must be drawn from "
                     f"{{'actor', 'learner'}}, got {sorted(bad)}")
+        if self.fabric is not None:
+            # typed FabricPlanError for malformed replica/tenant knobs —
+            # caught here so a bad carve fails before any engine builds
+            self.fabric.validate()
+            if self.roles:
+                raise PlanError(
+                    "a plan may set EITHER fabric or roles, not both: the "
+                    "fabric owns the replica->submesh carve, so an explicit "
+                    f"MPMD role split {self.roles} would double-claim the "
+                    "devices; drop one of the two legs")
         seen = set()
         for rname, count in self.roles:
             if rname in seen:

@@ -15,7 +15,7 @@ from __future__ import annotations
 from typing import Callable, Dict
 
 from repro.api.plan import HyperPlan
-from repro.configs.base import RLConfig, ServeConfig
+from repro.configs.base import FabricConfig, RLConfig, ServeConfig
 
 _REGISTRY: Dict[str, Callable[..., HyperPlan]] = {}
 
@@ -89,6 +89,18 @@ def rl_disagg(n_actor: int = 0, n_learner: int = 0, **over) -> HyperPlan:
     return HyperPlan(serve=ServeConfig(), rl=RLConfig(),
                      roles=(("actor", n_actor), ("learner", n_learner)),
                      name="rl_disagg").replace(**over)
+
+
+@register
+def fabric(replicas: int = 2, **over) -> HyperPlan:
+    """Multi-tenant serving fabric (HyperFabric): ``replicas`` HyperServe
+    engines on distinct submeshes carved from one Supernode, fronted by a
+    router with per-tenant SLO classes, weighted-fair admission, CoW
+    prefix-affinity routing and elastic drain/activate.  Fabric knobs ride
+    on ``fabric=``; per-replica serving knobs on ``serve=`` as usual."""
+    return HyperPlan(fsdp=None, serve=ServeConfig(),
+                     fabric=FabricConfig(replicas=replicas),
+                     name="fabric").replace(**over)
 
 
 @register

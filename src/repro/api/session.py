@@ -216,6 +216,23 @@ class Supernode:
                           seed=seed, moe_dispatch=moe_dispatch,
                           obs=self.obs())
 
+    def fabric(self, cfg, params, *, plan: Union[None, HyperPlan, object] = None,
+               seed: int = 0, moe_dispatch: Optional[str] = None):
+        """Multi-tenant serving fabric (HyperFabric): N HyperServe replicas
+        on submeshes carved from this session's devices, fronted by a
+        :class:`~repro.fabric.router.Router` with SLO-class weighted-fair
+        dispatch, prefix-affinity routing and elastic scale.  Plans
+        without a fabric leg get the default carve
+        (``plans.fabric(replicas=2)`` spells it out)."""
+        from repro.configs.base import FabricConfig
+        from repro.fabric.router import Router
+        hp = HyperPlan.coerce(plan, for_serving=True)
+        if hp.fabric is None:
+            hp = hp.replace(fabric=FabricConfig())
+        hp.validate(self.layout)
+        return Router.build(self, cfg, params, hp, seed=seed,
+                            moe_dispatch=moe_dispatch)
+
     def rl(self, cfg, *, plan: Union[None, HyperPlan, object] = None,
            params=None, adamw=None, seed: int = 0,
            moe_dispatch: Optional[str] = None):

@@ -1,0 +1,23 @@
+"""repro.fabric — HyperFabric: the multi-tenant serving tier.
+
+A :class:`Router` fronts N HyperServe replicas carved from one Supernode:
+per-tenant SLO classes with weighted-fair dispatch, typed admission
+control + backpressure, CoW prefix-affinity routing, and elastic replica
+drain/activate.  Built through the facade::
+
+    session = Supernode((1, 8))
+    fab = session.fabric(cfg, params, plan=plans.fabric(replicas=2))
+    fid = fab.submit(prompt, 32, tenant="chat")
+    fab.join()
+
+See :mod:`repro.fabric.router` for the full contract and
+:mod:`repro.fabric.carve` for the replica->submesh arithmetic.
+"""
+from repro.configs.base import FabricConfig, TenantSpec
+from repro.fabric.carve import carve_counts, describe_carve
+from repro.fabric.router import (SLO_POLICY, FabricRequest, Router)
+
+__all__ = [
+    "Router", "FabricRequest", "FabricConfig", "TenantSpec",
+    "carve_counts", "describe_carve", "SLO_POLICY",
+]

@@ -16,6 +16,21 @@ unservable prompts are rejected with :class:`RequestRejected`).  The
 engine advances only inside :meth:`step_once`, :meth:`stream`, and
 :meth:`join` — there is no background thread, so callers control exactly
 when device work happens (single-controller, like everything else here).
+
+Rejection contract (shared with the HyperFabric front door): every
+admission refusal anywhere in the serving stack raises
+:class:`RequestRejected`, a *typed* error carrying
+
+  - ``reason`` — ``"queue_full"`` (bounded queue at capacity; transient,
+    retry after ``retry_after_s``), ``"over_quota"`` (the tenant's
+    in-flight cap is reached; fabric-level only), or ``"unservable"``
+    (the prompt/budget can never fit the pool — retrying is pointless);
+  - ``tenant`` — the submitting tenant, when the front door is the
+    multi-tenant fabric (None for bare engine submits);
+  - ``retry_after_s`` — a backpressure hint for retryable reasons
+    (None when retrying cannot help).
+
+so a client can branch on the *category* without parsing messages.
 """
 from __future__ import annotations
 
@@ -27,7 +42,21 @@ from repro.serve.scheduler import RequestState
 
 
 class RequestRejected(RuntimeError):
-    """Admission control refused the request (queue full / can't ever fit)."""
+    """Admission control refused the request (typed front-door rejection).
+
+    Attributes: ``tenant`` (str | None), ``reason`` ("queue_full" |
+    "over_quota" | "unservable"), ``retry_after_s`` (float | None —
+    set only when retrying can help).  See the module docstring for the
+    full contract.
+    """
+
+    def __init__(self, message: str, *, tenant: Optional[str] = None,
+                 reason: str = "unservable",
+                 retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        self.tenant = tenant
+        self.reason = reason
+        self.retry_after_s = retry_after_s
 
 
 class HyperServe:
@@ -54,8 +83,11 @@ class HyperServe:
             arrival=arrival)
         if req.state is RequestState.REJECTED:
             raise RequestRejected(
-                f"request rejected: prompt_len={len(prompt)} "
-                f"max_new={max_new_tokens} (queue or pool limits)")
+                f"request rejected ({req.reject_reason}): "
+                f"prompt_len={len(prompt)} max_new={max_new_tokens}",
+                reason=req.reject_reason or "unservable",
+                retry_after_s=(0.05 if req.reject_reason == "queue_full"
+                               else None))
         return req.rid
 
     def cancel(self, rid: int) -> bool:
@@ -129,3 +161,7 @@ class HyperServe:
     # -- introspection -----------------------------------------------------
     def stats(self) -> Dict[str, float]:
         return self.engine.stats()
+
+    def snapshot(self) -> Dict:
+        """Read-only routing surface (see :meth:`ServeEngine.snapshot`)."""
+        return self.engine.snapshot()

@@ -570,6 +570,38 @@ class ServeEngine:
         return {rid: r.generated for rid, r in self.scheduler.requests.items()}
 
     # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Cheap read-only routing surface (HyperFabric keys off this).
+
+        Pure host-side scheduler/pool accounting — no device sync, no
+        mutation — so a router can poll it every dispatch decision.  The
+        prefix-cache view exposes both the retained block ids and the
+        token-tuple keys: the keys are what longest-prefix affinity
+        matching needs, the ids are what capacity accounting needs.
+        Everything here is deterministic given the request history, which
+        is what lets routing decisions (and their counters) be pinned
+        exactly by the bench gate.
+        """
+        sched = self.scheduler
+        prefilling = sum(1 for r in sched.active
+                         if r.state is RequestState.PREFILLING)
+        running = sum(1 for r in sched.active
+                      if r.state is RequestState.RUNNING)
+        return {
+            "queue_depth": len(sched.queue),
+            "prefilling": prefilling,
+            "running": running,
+            "free_slots": self.scfg.max_slots - prefilling - running,
+            "max_slots": self.scfg.max_slots,
+            "max_queue": sched.cfg.max_queue,
+            "free_blocks": self.blocks.num_free,
+            "block_occupancy": self.blocks.occupancy(),
+            "prefix_cache_block_ids": tuple(
+                b for bids in self._prefix_cache.values() for b in bids),
+            "prefix_keys": tuple(self._prefix_cache.keys()),
+            "has_work": sched.has_work(),
+        }
+
     def stats(self) -> Dict[str, float]:
         now = time.perf_counter()
         # interval rate: tokens since the previous stats() call over the
@@ -587,6 +619,7 @@ class ServeEngine:
         qw = m.histogram("serve.queue_wait_s")
         s = self.scheduler.stats()
         s.update({
+            "queue_depth": len(self.scheduler.queue),
             "tokens_generated": self.tokens_generated,
             "tokens_per_sec": tok_int / dt_int if dt_int > 0 else 0.0,
             "tokens_per_sec_cumulative":

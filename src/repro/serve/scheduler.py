@@ -86,6 +86,10 @@ class Request:
     logprobs: List[float] = dataclasses.field(default_factory=list)
     table: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    # why admission refused this request (None unless state is REJECTED):
+    # "unservable" = the prompt/budget can never fit the pool or is empty,
+    # "queue_full" = the bounded wait queue is at capacity (retryable)
+    reject_reason: Optional[str] = None
     shared_blocks: int = 0                    # CoW prefix-cache blocks reused
     spilled_blocks: int = 0                   # pages parked in the cold tier
     null_prefix: int = 0                      # leading window-freed table slots
@@ -208,13 +212,17 @@ class ContinuousScheduler:
         cannot_fit = self.needs_pages and (
             need > self.max_blocks_per_req
             or need + self.cfg.watermark_blocks > self.blocks.num_total)
-        if (not req.prompt or max_new_tokens < 1 or cannot_fit
-                or len(self.queue) >= self.cfg.max_queue):
-            req.state = RequestState.REJECTED     # can never (or won't) fit
+        if not req.prompt or max_new_tokens < 1 or cannot_fit:
+            req.reject_reason = "unservable"      # can never fit, ever
+        elif len(self.queue) >= self.cfg.max_queue:
+            req.reject_reason = "queue_full"      # transient: retry later
+        if req.reject_reason is not None:
+            req.state = RequestState.REJECTED
             self.counters["rejected"] += 1
             self.obs.metrics.counter("serve.rejected").inc()
             self.obs.trace.instant("serve.reject", rid=rid,
-                                   prompt_len=req.prompt_len)
+                                   prompt_len=req.prompt_len,
+                                   reason=req.reject_reason)
             return req
         self.queue.append(req)
         self.obs.metrics.counter("serve.submitted").inc()

@@ -1,0 +1,330 @@
+"""HyperFabric: router parity, SLO fairness, affinity, backpressure, elastic.
+
+The fabric's determinism contract is load-bearing here: routing, fairness
+and elastic decisions depend only on the submission history (wall-clock
+feeds metrics alone), so dispatch logs and affinity counters are asserted
+exactly — the same invariant the bench gate pins in CI.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import FabricPlanError, PlanError, Supernode, plans
+from repro.configs.base import (FabricConfig, ServeConfig, TenantSpec,
+                                get_config)
+from repro.models import model as M
+from repro.serve.api import HyperServe, RequestRejected
+from repro.serve.engine import GenerateConfig, Generator
+from tests.conftest import run_subprocess
+
+
+@pytest.fixture(scope="module")
+def qwen_f32():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def baseline(cfg, params, prompt, max_new):
+    gen = Generator(cfg, params, max_len=128)
+    out = gen.generate(jnp.asarray(prompt, jnp.int32)[None, :],
+                       GenerateConfig(max_new_tokens=max_new))
+    return out[0, len(prompt):].tolist()
+
+
+SCFG = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                   max_slots=3, prefill_chunk=4)
+
+
+def make_fabric(cfg, params, fcfg, scfg=SCFG):
+    session = Supernode()
+    return session.fabric(cfg, params,
+                          plan=plans.fabric(serve=scfg, fabric=fcfg))
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: routing must never change tokens
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("replicas", [1, 2])
+def test_fabric_greedy_matches_generator(qwen_f32, replicas):
+    cfg, params = qwen_f32
+    prompts = [list(range(1, 9)), list(range(20, 33)),
+               list(range(5, 10)), list(range(40, 47))]
+    max_new = [6, 4, 8, 5]
+    want = [baseline(cfg, params, p, mn) for p, mn in zip(prompts, max_new)]
+
+    fab = make_fabric(cfg, params, FabricConfig(replicas=replicas))
+    fids = [fab.submit(p, mn) for p, mn in zip(prompts, max_new)]
+    fab.join()
+    got = [fab.result(f) for f in fids]
+    assert got == want
+    st = fab.stats()
+    assert st["dispatched"] == len(prompts)
+    assert st["finished"] == len(prompts)
+    if replicas == 2:        # least-loaded fallback spreads work around
+        assert len({fab.request_meta(f)["replica"] for f in fids}) == 2
+
+
+# ---------------------------------------------------------------------------
+# SLO classes: weighted-fair dispatch, deterministic given submission order
+# ---------------------------------------------------------------------------
+def test_weighted_fair_dispatch_order_and_determinism(qwen_f32):
+    cfg, params = qwen_f32
+    fcfg = FabricConfig(
+        replicas=1, dispatch_depth=8,
+        tenants=(TenantSpec("chat", slo="interactive"),
+                 TenantSpec("bulk", slo="batch")))
+
+    def run():
+        fab = make_fabric(cfg, params, fcfg)
+        for i in range(5):
+            fab.submit([1 + i, 2, 3, 4, 5], 2, tenant="chat")
+            fab.submit([30 + i, 2, 3, 4, 5], 2, tenant="bulk")
+        fab.step()           # one dispatch pass over everything pending
+        order = [t for _, t, _ in fab.dispatch_log]
+        fab.join()
+        return order, [r for _, _, r in fab.dispatch_log]
+
+    order, replicas = run()
+    # stride fairness at weight 4:1, interactive-first tie-break:
+    # chat's virtual time advances 0.25/dispatch vs bulk's 1.0
+    assert order == ["chat", "bulk", "chat", "chat", "chat", "chat",
+                     "bulk", "bulk", "bulk", "bulk"]
+    order2, replicas2 = run()
+    assert (order, replicas) == (order2, replicas2)   # fully reproducible
+
+
+# ---------------------------------------------------------------------------
+# prefix affinity: requests follow the replica holding their CoW prefix
+# ---------------------------------------------------------------------------
+def test_prefix_affinity_routes_to_cow_holder(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params, FabricConfig(replicas=2))
+    shared = [7, 3, 9, 2, 11, 5, 13, 8]                 # two full blocks
+
+    warm = fab.submit(shared + [17, 19], 3)
+    fab.join()                                          # replica 0 retains
+    assert fab.request_meta(warm)["replica"] == 0
+
+    # a filler occupies replica 0, so least-loaded would now pick 1 ...
+    filler = fab.submit(list(range(50, 60)), 8)
+    fab.step()
+    assert fab.request_meta(filler)["replica"] == 0     # tie-break: lowest
+
+    # ... but the shared-prefix request must still follow the cache to 0
+    tail = [21, 23]
+    want = baseline(cfg, params, shared + tail, 4)
+    aff = fab.submit(shared + tail, 4)
+    fab.join()
+    meta = fab.request_meta(aff)
+    assert meta["replica"] == 0
+    assert meta["affinity_hit"] is True
+    assert fab.stats()["affinity_hits"] == 1
+    # the forked CoW blocks must decode the exact same greedy tokens
+    assert fab.result(aff) == want
+    # and the engine itself counted the prefix fork
+    assert fab.replicas[0].stats()["prefix_hits"] >= 1
+
+
+def test_affinity_disabled_falls_back_to_least_loaded(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params,
+                      FabricConfig(replicas=2, affinity=False))
+    shared = [7, 3, 9, 2, 11, 5, 13, 8]
+    fab.submit(shared + [17, 19], 3)
+    fab.join()
+    fab.submit(shared + [21, 23], 3)
+    fab.join()
+    assert fab.stats()["affinity_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# admission control: typed rejections + backpressure, admit after drain
+# ---------------------------------------------------------------------------
+def test_backpressure_queue_full_then_admit_after_drain(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params,
+                      FabricConfig(replicas=1, max_pending=2,
+                                   retry_after_s=0.125))
+    fab.submit([1, 2, 3], 2)
+    fab.submit([4, 5, 6], 2)
+    with pytest.raises(RequestRejected) as ei:
+        fab.submit([7, 8, 9], 2)
+    assert ei.value.reason == "queue_full"
+    assert ei.value.tenant == "default"
+    assert ei.value.retry_after_s == 0.125
+    fab.join()                                   # drain the front door
+    fid = fab.submit([7, 8, 9], 2)               # now it must admit
+    fab.join()
+    assert len(fab.result(fid)) == 2
+    assert fab.stats()["rejected"] == 1
+
+
+def test_over_quota_rejection_names_tenant(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params, FabricConfig(
+        replicas=1,
+        tenants=(TenantSpec("capped", max_inflight=1),)))
+    fab.submit([1, 2, 3], 2, tenant="capped")
+    with pytest.raises(RequestRejected) as ei:
+        fab.submit([4, 5, 6], 2, tenant="capped")
+    assert ei.value.reason == "over_quota"
+    assert ei.value.tenant == "capped"
+    assert ei.value.retry_after_s is not None
+    fab.join()                                   # in-flight count drops
+    fab.submit([4, 5, 6], 2, tenant="capped")
+    fab.join()
+
+
+def test_unservable_rejected_at_front_door(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params, FabricConfig(replicas=1))
+    with pytest.raises(RequestRejected) as ei:
+        fab.submit(list(range(1, 200)), 64)      # can never fit the pool
+    assert ei.value.reason == "unservable"
+    assert ei.value.retry_after_s is None        # retrying cannot help
+    with pytest.raises(KeyError):
+        fab.submit([1, 2], 2, tenant="nobody")
+
+
+def test_engine_level_rejection_is_typed(qwen_f32):
+    cfg, params = qwen_f32
+    serve = HyperServe(cfg, params, serve_cfg=SCFG)
+    with pytest.raises(RequestRejected) as ei:
+        serve.submit([], 4)
+    assert ei.value.reason == "unservable"
+    assert ei.value.tenant is None               # bare engine: no tenant
+
+
+# ---------------------------------------------------------------------------
+# elastic scale: drain when idle, re-activate on queue depth
+# ---------------------------------------------------------------------------
+def test_elastic_drain_then_activate(qwen_f32):
+    cfg, params = qwen_f32
+    fab = make_fabric(cfg, params, FabricConfig(
+        replicas=2, elastic=True, min_replicas=1, scale_up_pending=2))
+    fab.step()                                   # idle -> drain replica 1
+    st = fab.stats()
+    assert st["active_replicas"] == 1
+    assert st["replica_states"] == ("active", "draining")
+    assert st["scale_down"] == 1
+    fab.step()                                   # stays at min_replicas
+    assert fab.stats()["active_replicas"] == 1
+
+    fids = [fab.submit([10 + i, 2, 3], 2) for i in range(3)]
+    fab.step()                                   # pending 3 > 2: re-activate
+    st = fab.stats()
+    assert st["active_replicas"] == 2
+    assert st["scale_up"] == 1
+    fab.join()
+    assert all(len(fab.result(f)) == 2 for f in fids)
+
+
+# ---------------------------------------------------------------------------
+# engine snapshot surface (the router's entire read path)
+# ---------------------------------------------------------------------------
+def test_engine_snapshot_surface(qwen_f32):
+    cfg, params = qwen_f32
+    serve = HyperServe(cfg, params, serve_cfg=SCFG)
+    snap = serve.snapshot()
+    for key in ("queue_depth", "prefilling", "running", "free_slots",
+                "max_slots", "max_queue", "free_blocks", "block_occupancy",
+                "prefix_cache_block_ids", "prefix_keys", "has_work"):
+        assert key in snap, key
+    assert snap["queue_depth"] == 0 and snap["has_work"] is False
+    rid = serve.submit([1, 2, 3, 4, 5], 3)
+    snap = serve.snapshot()
+    assert snap["queue_depth"] == 1 and snap["has_work"] is True
+    assert serve.stats()["queue_depth"] == 1
+    serve.join()
+    snap = serve.snapshot()
+    assert snap["queue_depth"] == 0
+    assert len(serve.result(rid)) == 3
+    # the finished prompt's blocks are retained in the CoW prefix cache
+    assert snap["prefix_keys"] == ((1, 2, 3, 4),)
+    assert len(snap["prefix_cache_block_ids"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# plan validation + explain
+# ---------------------------------------------------------------------------
+def test_fabric_plan_validation(qwen_f32):
+    cfg, _ = qwen_f32
+    with pytest.raises(FabricPlanError):
+        plans.fabric(replicas=0).validate()
+    with pytest.raises(FabricPlanError):
+        plans.fabric(fabric=FabricConfig(replicas=2,
+                                         split=(1, 2, 3))).validate()
+    with pytest.raises(FabricPlanError):
+        plans.fabric(fabric=FabricConfig(
+            tenants=(TenantSpec("a"), TenantSpec("a")))).validate()
+    with pytest.raises(FabricPlanError):
+        plans.fabric(fabric=FabricConfig(
+            tenants=(TenantSpec("a", slo="premium"),))).validate()
+    with pytest.raises(PlanError, match="EITHER fabric or roles"):
+        plans.fabric(roles=(("prefill", 1), ("decode", 1))).validate()
+
+
+def test_split_overclaim_raises(qwen_f32):
+    cfg, params = qwen_f32
+    session = Supernode()
+    with pytest.raises(FabricPlanError, match="claims"):
+        session.fabric(cfg, params, plan=plans.fabric(
+            fabric=FabricConfig(replicas=2, split=(1, 1))))
+
+
+def test_explain_reports_replica_carve(qwen_f32):
+    cfg, _ = qwen_f32
+    session = Supernode()
+    rep = session.explain(plans.fabric(replicas=2, fabric=FabricConfig(
+        replicas=2, tenants=(TenantSpec("chat"),
+                             TenantSpec("bulk", slo="batch")))),
+        cfg, for_serving=True)
+    rows = rep.select("fabric")
+    paths = [r.path for r in rows]
+    assert paths == ["replica[0]", "replica[1]", "tenant[chat]",
+                     "tenant[bulk]"]
+    assert "weight=4" in rows[2].rule and "weight=1" in rows[3].rule
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device run: two (1, 4) submesh replicas, exact greedy parity
+# ---------------------------------------------------------------------------
+def test_fabric_two_submesh_replicas_8dev():
+    out = run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.api import Supernode, plans
+from repro.configs.base import get_config, ServeConfig
+from repro.models import model as M
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+prompts = [list(range(1, 9)), list(range(20, 29)), list(range(5, 12))]
+gen = Generator(cfg, params, max_len=64)
+want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                     GenerateConfig(max_new_tokens=5))[0, len(p):].tolist()
+        for p in prompts]
+
+session = Supernode((1, 8))
+scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                   max_slots=2, prefill_chunk=4)
+fab = session.fabric(cfg, params, plan=plans.fabric(replicas=2, serve=scfg))
+for i, rep in enumerate(fab.replicas):
+    shape = rep.engine.mesh.devices.shape
+    assert shape == (1, 4), (i, shape)
+meshes = [tuple(d.id for d in rep.engine.mesh.devices.flat)
+          for rep in fab.replicas]
+assert set(meshes[0]).isdisjoint(meshes[1]), meshes
+fids = [fab.submit(p, 5) for p in prompts]
+fab.join()
+got = [fab.result(f) for f in fids]
+assert got == want, (got, want)
+assert {fab.request_meta(f)["replica"] for f in fids} == {0, 1}
+print("FABRIC-8DEV-OK", meshes)
+""")
+    assert "FABRIC-8DEV-OK" in out

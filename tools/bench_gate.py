@@ -1,9 +1,10 @@
 #!/usr/bin/env python
 """Benchmark regression gate (``make bench-gate``; a CI job runs it).
 
-Re-runs the tiny fixed-seed serve + RL throughput benchmarks and compares
-their RATIO metrics — continuous-vs-serial speedup, the batched-prefill
-lift on the long-prompt workload, the RL rollout speedup — against the
+Re-runs the tiny fixed-seed serve + RL + fabric throughput benchmarks and
+compares their RATIO metrics — continuous-vs-serial speedup, the
+batched-prefill lift on the long-prompt workload, the RL rollout speedup,
+the fabric's interactive-TTFT advantage over a shared FCFS engine — against the
 checked-in ``results/BENCH_*.json`` baselines.  Ratios, not absolute
 tokens/sec: both sides of every ratio run in the same process on the same
 machine, so the metric transfers across hardware while still catching
@@ -44,6 +45,8 @@ GATES = (
      "continuous vs serial tok/s (hybrid)"),
     ("BENCH_rl", ("speedup_tokens_per_sec",),
      "continuous vs sequential rollout tok/s"),
+    ("BENCH_fabric", ("ttft", "speedup_p95_wall"),
+     "fabric vs shared-FCFS interactive p95 TTFT (wall)"),
 )
 
 # DETERMINISTIC gates: fixed-seed host-side counters (scheduler decisions,
@@ -66,6 +69,18 @@ DET_GATES = (
      "CoW shared-prefix hit rate (attn)"),
     ("BENCH_serve", ("cow", "forked_blocks"),
      "CoW forked block count (attn)"),
+    # HyperFabric: every routing / fairness decision is host-side and
+    # wall-clock-free, so step-indexed TTFT and affinity hits are exact
+    ("BENCH_fabric", ("ttft", "fcfs_interactive_p95_steps"),
+     "shared-FCFS interactive p95 TTFT (engine steps)"),
+    ("BENCH_fabric", ("ttft", "fabric_interactive_p95_steps"),
+     "fabric interactive p95 TTFT (router steps)"),
+    ("BENCH_fabric", ("ttft", "speedup_p95_steps"),
+     "fabric vs shared-FCFS interactive p95 TTFT speedup (steps)"),
+    ("BENCH_fabric", ("affinity", "hits"),
+     "prefix-affinity routing hits (shared system prompt)"),
+    ("BENCH_fabric", ("affinity", "hit_rate"),
+     "prefix-affinity hit rate"),
 )
 
 
@@ -94,9 +109,10 @@ def main(argv=None) -> int:
     from benchmarks import common
     os.makedirs(args.out, exist_ok=True)
     common.RESULTS_DIR = args.out
-    from benchmarks import rl_throughput, serve_throughput
+    from benchmarks import fabric_throughput, rl_throughput, serve_throughput
     serve_throughput.run()
     rl_throughput.run()
+    fabric_throughput.run()
 
     fresh = {}
     for stem in stems:

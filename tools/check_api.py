@@ -82,6 +82,79 @@ def check_rl_api(session) -> int:
     return failures
 
 
+# the HyperFabric public surface: every name must exist in
+# repro.fabric.__all__ AND resolve to a real attribute
+FABRIC_EXPORTS = ("Router", "FabricRequest", "FabricConfig", "TenantSpec",
+                  "carve_counts", "describe_carve", "SLO_POLICY")
+
+
+def check_fabric_api(session) -> int:
+    """Gate: repro.fabric exports, the ``fabric`` preset resolves with
+    replica-carve rows in the report, and the fabric-leg validation
+    actually rejects malformed configs (typed FabricPlanError)."""
+    import repro.fabric as fabric_mod
+    from repro.api import FabricPlanError, PlanError, plans
+    from repro.configs.base import FabricConfig, TenantSpec, get_config
+
+    failures = 0
+    missing = [n for n in FABRIC_EXPORTS
+               if n not in fabric_mod.__all__ or not hasattr(fabric_mod, n)]
+    if missing:
+        print(f"FAIL fabric exports: missing {missing}")
+        failures += 1
+    else:
+        print(f"OK   fabric exports: {len(FABRIC_EXPORTS)} names")
+
+    if "fabric" not in plans.names():
+        print("FAIL fabric preset: not registered")
+        failures += 1
+    else:
+        try:
+            report = session.explain(plans.fabric(replicas=2),
+                                     get_config("qwen2-0.5b").reduced(),
+                                     for_serving=True)
+            rows = report.select("fabric")
+            n_replicas = sum(1 for r in rows
+                             if r.path.startswith("replica["))
+            n_tenants = sum(1 for r in rows if r.path.startswith("tenant["))
+            ok = n_replicas == 2 and n_tenants >= 1
+            print(f"{'OK  ' if ok else 'FAIL'} fabric preset: explain "
+                  f"reports {n_replicas} replica carve rows, "
+                  f"{n_tenants} tenant rows")
+            if not ok:
+                failures += 1
+        except PlanError as e:
+            print(f"FAIL fabric preset: {type(e).__name__}: {e}")
+            failures += 1
+
+    bad_cfgs = (
+        FabricConfig(replicas=0),
+        FabricConfig(replicas=2, split=(1,)),
+        FabricConfig(tenants=(TenantSpec("a"), TenantSpec("a"))),
+        FabricConfig(tenants=(TenantSpec("a", slo="gold"),)),
+    )
+    rejected = 0
+    for bad in bad_cfgs:
+        try:
+            plans.fabric(fabric=bad).validate()
+        except FabricPlanError:
+            rejected += 1
+    if rejected != len(bad_cfgs):
+        print(f"FAIL fabric validation: {rejected}/{len(bad_cfgs)} bad "
+              "configs rejected")
+        failures += 1
+    else:
+        print(f"OK   fabric validation: {rejected}/{len(bad_cfgs)} bad "
+              "configs rejected with FabricPlanError")
+    try:
+        plans.fabric(roles=(("prefill", 1),)).validate()
+        print("FAIL fabric validation: fabric+roles double-claim accepted")
+        failures += 1
+    except PlanError:
+        print("OK   fabric validation: fabric+roles double-claim rejected")
+    return failures
+
+
 # the HyperTrace public surface: every name must exist in repro.obs.__all__
 # AND resolve to a real attribute
 OBS_EXPORTS = ("Observability", "default_obs", "Tracer", "validate_perfetto",
@@ -234,6 +307,7 @@ def main() -> int:
     failures += check_mixer_registry()
     failures += check_serve_state(session)
     failures += check_rl_api(session)
+    failures += check_fabric_api(session)
     for preset in PRESETS:
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
