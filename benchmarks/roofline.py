@@ -4,7 +4,17 @@ compute/memory/collective terms from the compiled dry-run artifacts.
 Reads results/dryrun_full.json (produced by repro.launch.dryrun --both)
 and prints the full baseline table + dominant bottleneck + the
 MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+
+Also prints the fused paged-kernel roofline table from
+``results/BENCH_kernels.json`` (written by ``benchmarks.kernels_bench``):
+per case, the analytic FLOPs/bytes of the fused vs composed lowering,
+the v5e-projected microseconds, and the predicted-vs-measured overhead
+factor the CI gate tracks.
 """
+import json
+import os
+
+from benchmarks import common
 from benchmarks.common import load_dryrun, row
 
 
@@ -27,8 +37,36 @@ def fmt_table(results):
     return "\n".join(lines)
 
 
+def kernel_table():
+    """Fused paged-kernel roofline from the perf-model cost functions."""
+    path = os.path.join(common.RESULTS_DIR, "BENCH_kernels.json")
+    if not os.path.exists(path):
+        row("roofline.kernels", 0.0, "results/BENCH_kernels.json missing — "
+            "run PYTHONPATH=src python -m benchmarks.kernels_bench")
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    hdr = (f"{'kernel':16s} {'path':9s} {'MFLOP':>8s} {'MiB':>7s} "
+           f"{'intensity':>9s} {'tpu_us':>7s} {'overhead':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, case in sorted(data["cases"].items()):
+        for pth in ("fused", "composed"):
+            c = case[pth]
+            tpu_us = case["tpu"][f"{pth}_us"]
+            print(f"{name:16s} {pth:9s} {c['flops']/1e6:8.2f} "
+                  f"{c['hbm_bytes']/2**20:7.2f} "
+                  f"{c['flops']/max(c['hbm_bytes'], 1.0):9.2f} "
+                  f"{tpu_us:7.2f} x{c['overhead_factor']:8.1f}")
+        row(f"roofline.kernels.{name}.speedup", 0.0,
+            f"v5e roofline composed/fused "
+            f"x{case['tpu']['roofline_speedup']:.2f}")
+    return data["cases"]
+
+
 def run():
     data = load_dryrun()
+    kernels = kernel_table()
     if not data:
         row("roofline.table", 0.0, "results/dryrun_full.json missing — run "
             "PYTHONPATH=src python -m repro.launch.dryrun --both --out "
@@ -48,7 +86,8 @@ def run():
     row("roofline.bottleneck_histogram", 0.0, str(dominant))
     fails = data.get("failures", [])
     row("roofline.failures", 0.0, str(len(fails)))
-    return {"n_single": n1, "n_multi": n2, "failures": len(fails)}
+    return {"n_single": n1, "n_multi": n2, "failures": len(fails),
+            "kernels": sorted(kernels)}
 
 
 if __name__ == "__main__":

@@ -73,12 +73,20 @@ class PlanReport:
         return self.select("state")
 
     @property
+    def kernels(self):
+        """Kernel-lowering rows: which attention path (fused Pallas kernel
+        vs composed gather+dense) each paged sub-layer's decode / prefill
+        hook lowers to under the plan's ``kernels`` toggle."""
+        return self.select("kernel")
+
+    @property
     def fallbacks(self) -> Tuple[LeafReport, ...]:
         return tuple(l for l in self.leaves if l.fell_back)
 
     def coverage(self) -> dict:
         return {"param": len(self.params), "opt": len(self.opt),
                 "cache": len(self.caches), "state": len(self.serve_state),
+                "kernel": len(self.kernels),
                 "fallbacks": len(self.fallbacks)}
 
     def raise_on_fallback(self) -> "PlanReport":
@@ -107,6 +115,7 @@ class PlanReport:
         rows.append(f"{c['param']} params, {c['opt']} opt leaves, "
                     f"{c['cache']} cache leaves, "
                     f"{c['state']} serving-state leaves, "
+                    f"{c['kernel']} kernel rows, "
                     f"{c['fallbacks']} divisibility fallbacks")
         return "\n".join(rows)
 
@@ -207,11 +216,46 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
                         "state", path, tuple(leaf.shape),
                         strat.partition_spec(), kind_desc, note, fbs))
 
+        # kernel-lowering rows: which attention path each paged sub-layer
+        # takes under the plan's `kernels` toggle, on THIS host's backend
+        # (the same resolve the serving runtime applies at engine build)
+        from repro.kernels.ops import resolve_paged_path
+        resolved = resolve_paged_path(scfg.kernels)
+        rule = f"kernels={scfg.kernels} -> {resolved}"
+        for seg in st_layout.segments:
+            for j, spec in enumerate(seg.specs):
+                if spec.state == MX.SLOT:
+                    continue
+                for hook in ("decode", "prefill"):
+                    desc = _kernel_lowering(spec, hook, resolved)
+                    hook_rule = rule if hook in spec.fused_hooks else (
+                        f"{rule} (no fused {hook} hook)")
+                    leaves.append(LeafReport(
+                        "kernel", f"{seg.name}/{j}.{spec.kind}/{hook}",
+                        (), desc, "kernel", hook_rule, ()))
+
     if plan.fabric is not None:
         leaves.extend(_fabric_rows(plan, layout))
 
     return PlanReport(plan, getattr(cfg, "name", str(cfg)), layout,
                       tuple(leaves))
+
+
+def _kernel_lowering(spec, hook: str, resolved: str) -> str:
+    """Human-readable lowering for one (mixer, hook) under the resolved
+    kernel path — the fused Pallas kernel name when the hook is fused,
+    the composed gather+dense pipeline otherwise."""
+    mla = spec.kind == "mla"
+    if resolved == "fused" and hook in spec.fused_hooks:
+        if hook == "decode":
+            return ("fused(paged_mla_decode_attention)" if mla
+                    else "fused(paged_decode_attention)")
+        return "fused(ragged_prefill_attention)"
+    if hook == "decode":
+        return ("composed(gather+mla_decode)" if mla
+                else "composed(gather+decode_attention)")
+    return ("composed(gather+mla_prefill_chunk)" if mla
+            else "composed(gather+flash_rows)")
 
 
 def _fabric_rows(plan: HyperPlan, layout: Layout):

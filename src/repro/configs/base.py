@@ -245,6 +245,12 @@ class ServeConfig:
     # copy-on-write prompt-prefix sharing
     enable_prefix_cache: bool = True
     prefix_cache_blocks: int = 32      # LRU cap on retained blocks
+    # attention lowering for the paged steps:
+    #   "fused"    — block-table-walking Pallas kernels (one kernel per
+    #                step, no pool gather; interpret mode off-TPU)
+    #   "composed" — gather tables -> dense flash (the XLA lowering)
+    #   "auto"     — fused on TPU, composed elsewhere
+    kernels: str = "auto"
 
     def replace(self, **kw) -> "ServeConfig":
         return replace(self, **kw)
@@ -267,6 +273,9 @@ class ServeConfig:
             if getattr(self, knob) < lo:
                 problems.append(f"{knob}={getattr(self, knob)} (must be "
                                 f">= {lo})")
+        if self.kernels not in ("auto", "fused", "composed"):
+            problems.append(f"kernels={self.kernels!r} (must be one of "
+                            f"'auto', 'fused', 'composed')")
         if problems:
             raise ServePlanError("invalid ServeConfig: "
                                  + "; ".join(problems))

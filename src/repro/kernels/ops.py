@@ -61,6 +61,64 @@ def decode_attention(q, k_cache, v_cache, length, *, scale=None, window=None):
                                interpret=not use)
 
 
+def resolve_paged_path(kernels: str) -> str:
+    """Resolve the plan-level ``kernels`` toggle to a lowering path.
+
+    ``"fused"``    -> the block-table-walking Pallas kernels (interpret
+                      mode off-TPU, so the no-gather property holds on
+                      every backend);
+    ``"composed"`` -> the historical gather+flash XLA lowering;
+    ``"auto"``     -> fused on TPU, composed elsewhere (CPU serving
+                      keeps the fast XLA path by default — interpret
+                      mode is a correctness fallback, not a fast one).
+    """
+    assert kernels in ("auto", "fused", "composed"), kernels
+    if kernels == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "composed"
+    return kernels
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           block_size, window=None, scale=None):
+    """Fused paged decode: block table walked in-kernel, no pool gather."""
+    if _MODE == "ref":
+        return ref.paged_decode_attention(
+            q, k_pool, v_pool, block_tables, lengths,
+            block_size=block_size, window=window, scale=scale)
+    from repro.kernels import paged_decode_attention as pda
+    return pda.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths, block_size=block_size,
+        window=window, scale=scale, interpret=_use_pallas() is not True)
+
+
+def paged_mla_decode_attention(q_lat, q_rope, ckv_pool, krope_pool,
+                               block_tables, lengths, *, block_size, scale):
+    """Fused MLA absorbed paged decode over the latent pools."""
+    if _MODE == "ref":
+        return ref.paged_mla_decode_attention(
+            q_lat, q_rope, ckv_pool, krope_pool, block_tables, lengths,
+            block_size=block_size, scale=scale)
+    from repro.kernels import paged_decode_attention as pda
+    return pda.paged_mla_decode_attention(
+        q_lat, q_rope, ckv_pool, krope_pool, block_tables, lengths,
+        block_size=block_size, scale=scale,
+        interpret=_use_pallas() is not True)
+
+
+def ragged_prefill_attention(q, k_pool, v_pool, block_tables, starts, limits,
+                             *, block_size, window=None, scale=None):
+    """Fused ragged batched-prefill: (start, limit) consumed in-kernel."""
+    if _MODE == "ref":
+        return ref.ragged_prefill_attention(
+            q, k_pool, v_pool, block_tables, starts, limits,
+            block_size=block_size, window=window, scale=scale)
+    from repro.kernels import ragged_prefill_attention as rpa
+    return rpa.ragged_prefill_attention(
+        q, k_pool, v_pool, block_tables, starts, limits,
+        block_size=block_size, window=window, scale=scale,
+        interpret=_use_pallas() is not True)
+
+
 def grouped_matmul(x, w, group_sizes):
     use = _use_pallas()
     if use is None:

@@ -1,0 +1,219 @@
+"""Analytic bytes/FLOPs perf model for the paged attention kernels.
+
+Methodology (csl-experiments SUMMA compute model, SNIPPETS.md Snippet 2):
+absolute timings on a shared CI host are noise, but the *ratio* of a
+measured time to the machine's pure-work lower bound — the overhead
+factor — is stable enough to gate.  So:
+
+  1. :func:`calibrate_host` measures the host's achievable FLOP/s and
+     copy bandwidth once per process (big matmul, big copy);
+  2. each kernel's :class:`KernelCost` derives its pure-work seconds as
+     ``max(flops / flops_per_s, bytes / bytes_per_s)`` (roofline: the
+     kernel is bound by whichever resource it saturates);
+  3. ``overhead_factor = measured / pure`` is stored with the checked-in
+     baseline (``results/BENCH_kernels.json``); CI recomputes it and
+     ``tools/bench_gate.py`` fails when the ratio drifts outside a band —
+     a kernel that suddenly does 3x the work fails even though the CI
+     host's absolute speed differs from the baseline host's.
+
+The cost functions model the *data-dependent* page walk: the fused
+kernels skip dead rows, beyond-length pages and below-window pages with
+``pl.when``, so pages-visited is computed from the same ``lengths`` /
+``starts/limits`` vectors the kernels consume — the model and the kernel
+share one definition of the work.  ``tpu_seconds`` projects the same
+costs onto the v5e roofline for ``benchmarks/roofline.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+from repro.core.topology import HBM_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Pure-work resource counts for one kernel invocation."""
+    name: str
+    flops: float              # MXU FLOPs (2 * M * N * K per matmul)
+    hbm_bytes: float          # bytes moved HBM<->VMEM (read + write)
+
+    def pure_seconds(self, flops_per_s: float, bytes_per_s: float) -> float:
+        """Roofline lower bound on this host: bound by the slower resource."""
+        return max(self.flops / flops_per_s, self.hbm_bytes / bytes_per_s)
+
+    def tpu_seconds(self, *, peak_flops: float = PEAK_FLOPS_BF16,
+                    hbm_bw: float = HBM_BW) -> float:
+        """The same bound projected onto the v5e roofline."""
+        return self.pure_seconds(peak_flops, hbm_bw)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# pages-visited: the shared work definition (mirrors the pl.when skips)
+# ---------------------------------------------------------------------------
+def decode_pages_visited(lengths: Sequence[int], *, block_size: int,
+                         window: Optional[int] = None) -> int:
+    """Pages the fused decode kernel computes on, summed over rows.
+
+    Mirrors ``paged_decode_attention``'s skip: page ``w`` is live iff
+    ``w*bs < length`` and (windowed) ``(w+1)*bs > length - window``.
+    """
+    total = 0
+    for length in lengths:
+        for w in range((int(length) + block_size - 1) // block_size):
+            if window is not None and (w + 1) * block_size <= length - window:
+                continue
+            total += 1
+    return total
+
+
+def prefill_pages_visited(starts: Sequence[int], limits: Sequence[int],
+                          chunk: int, *, block_size: int, table_width: int,
+                          window: Optional[int] = None) -> int:
+    """Pages the fused ragged-prefill kernel computes on, summed over rows.
+
+    Mirrors ``ragged_prefill_attention``'s skip: dead rows contribute 0;
+    live rows visit pages up to the causal bound ``start + C - 1`` (and
+    above the window bound when windowed).
+    """
+    total = 0
+    for start, limit in zip(starts, limits):
+        if limit <= 0:
+            continue
+        for w in range(table_width):
+            if w * block_size > start + chunk - 1:
+                continue
+            if window is not None and (w + 1) * block_size <= start - window + 1:
+                continue
+            total += 1
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-kernel costs
+# ---------------------------------------------------------------------------
+def paged_decode_cost(*, batch: int, num_heads: int, kv_heads: int,
+                      head_dim: int, block_size: int, pages_visited: int,
+                      itemsize: int, fused: bool = True,
+                      table_width: int = 0) -> KernelCost:
+    """Cost of one paged decode attention step (B single-token queries).
+
+    Fused: each live page's K and V stream from the pool exactly once;
+    FLOPs cover only live pages.  Composed: the dense
+    ``pool[block_tables]`` gather reads the FULL table width (dead pages
+    included), writes the dense copy, flash re-reads it, and the dense
+    math runs over the full width — 3x the HBM traffic of one full-width
+    read, regardless of how much of the table is live.
+    """
+    # per row-page, all kv heads: scores 2*H*bs*D + readout 2*H*bs*D
+    page_flops = 4 * num_heads * block_size * head_dim
+    # one page of the {k,v} pools, all kv heads
+    page_bytes = 2 * block_size * kv_heads * head_dim * itemsize
+    q_bytes = batch * num_heads * head_dim * itemsize
+    o_bytes = q_bytes
+    if fused:
+        flops = pages_visited * page_flops
+        kv_bytes = pages_visited * page_bytes
+    else:
+        full = batch * table_width
+        flops = full * page_flops
+        kv_bytes = 3 * full * page_bytes
+    return KernelCost("paged_decode" if fused else "paged_decode_composed",
+                      float(flops), float(kv_bytes + q_bytes + o_bytes))
+
+
+def mla_decode_cost(*, batch: int, num_heads: int, lora_rank: int,
+                    rope_dim: int, block_size: int, pages_visited: int,
+                    itemsize: int, fused: bool = True,
+                    table_width: int = 0) -> KernelCost:
+    """Cost of one MLA absorbed paged decode step over the latent pools."""
+    # per page: scores 2*H*bs*(R+r) + latent readout 2*H*bs*R
+    page_flops = 2 * num_heads * block_size * (2 * lora_rank + rope_dim)
+    page_bytes = block_size * (lora_rank + rope_dim) * itemsize
+    q_bytes = batch * num_heads * (lora_rank + rope_dim) * itemsize
+    o_bytes = batch * num_heads * lora_rank * 4            # f32 latent out
+    if fused:
+        flops = pages_visited * page_flops
+        kv_bytes = pages_visited * page_bytes
+    else:
+        full = batch * table_width
+        flops = full * page_flops
+        kv_bytes = 3 * full * page_bytes
+    return KernelCost("mla_decode" if fused else "mla_decode_composed",
+                      float(flops), float(kv_bytes + q_bytes + o_bytes))
+
+
+def ragged_prefill_cost(*, rows_live: int, chunk: int, num_heads: int,
+                        kv_heads: int, head_dim: int, block_size: int,
+                        pages_visited: int, itemsize: int,
+                        fused: bool = True, rows_total: int = 0,
+                        table_width: int = 0) -> KernelCost:
+    """Cost of one batched ragged-prefill step (C queries per live row).
+
+    Composed pays for every row (filler included) over the full table
+    width; fused pays only for live rows' causally-reachable pages.
+    """
+    page_flops = 4 * chunk * num_heads * block_size * head_dim
+    page_bytes = 2 * block_size * kv_heads * head_dim * itemsize
+    if fused:
+        q_rows = rows_live
+        flops = pages_visited * page_flops
+        kv_bytes = pages_visited * page_bytes
+    else:
+        q_rows = rows_total or rows_live
+        full = q_rows * table_width
+        flops = full * page_flops
+        kv_bytes = 3 * full * page_bytes
+    q_bytes = q_rows * chunk * num_heads * head_dim * itemsize
+    return KernelCost(
+        "ragged_prefill" if fused else "ragged_prefill_composed",
+        float(flops), float(kv_bytes + 2 * q_bytes))
+
+
+# ---------------------------------------------------------------------------
+# host calibration (once per process)
+# ---------------------------------------------------------------------------
+_HOST_CAL = None
+
+
+def calibrate_host(force: bool = False) -> dict:
+    """Measure this host's achievable FLOP/s and copy bandwidth.
+
+    One big f32 matmul and one big copy, best-of-3 — coarse on purpose:
+    the overhead factor absorbs the gap between this and what small
+    kernels achieve, and the gate only cares that the factor is STABLE.
+    """
+    global _HOST_CAL
+    if _HOST_CAL is not None and not force:
+        return _HOST_CAL
+    import jax
+    import jax.numpy as jnp
+
+    n = 1024
+    a = jnp.ones((n, n), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    mm(a).block_until_ready()
+    t_mm = min(_timed(lambda: mm(a).block_until_ready()) for _ in range(3))
+    flops_per_s = 2 * n ** 3 / t_mm
+
+    m = 4 * 1024 * 1024                       # 16 MiB copy
+    b = jnp.ones((m,), jnp.float32)
+    cp = jax.jit(lambda x: x + 1.0)
+    cp(b).block_until_ready()
+    t_cp = min(_timed(lambda: cp(b).block_until_ready()) for _ in range(3))
+    bytes_per_s = 2 * 4 * m / t_cp            # read + write
+
+    _HOST_CAL = {"flops_per_s": flops_per_s, "bytes_per_s": bytes_per_s,
+                 "backend": jax.default_backend()}
+    return _HOST_CAL
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

@@ -164,6 +164,92 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged attention oracles (gather + dense): ground truth for the fused
+# block-table-walking kernels in paged_decode_attention.py /
+# ragged_prefill_attention.py.  Deliberately written as the composed
+# lowering — pool[block_tables] gather then the dense oracle above — so
+# fused-vs-composed parity is provable by construction.
+# ---------------------------------------------------------------------------
+def paged_decode_attention(
+    q: jax.Array,             # (B, 1, H, Dk)
+    k_pool: jax.Array,        # (N_blocks, block_size, KV, Dk)
+    v_pool: jax.Array,        # (N_blocks, block_size, KV, Dv)
+    block_tables: jax.Array,  # (B, W) int32
+    lengths: jax.Array,       # (B,) int32
+    *,
+    block_size: int,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Paged decode oracle. Returns (B, 1, H, Dv) in q.dtype."""
+    B, W = block_tables.shape
+    KV, Dk = k_pool.shape[2], k_pool.shape[3]
+    Dv = v_pool.shape[3]
+    k_seq = k_pool[block_tables].reshape(B, W * block_size, KV, Dk)
+    v_seq = v_pool[block_tables].reshape(B, W * block_size, KV, Dv)
+    return decode_attention(q, k_seq, v_seq, lengths, scale=scale,
+                            window=window)
+
+
+def ragged_prefill_attention(
+    q: jax.Array,             # (P, C, H, Dk)
+    k_pool: jax.Array,        # (N_blocks, block_size, KV, Dk)
+    v_pool: jax.Array,        # (N_blocks, block_size, KV, Dv)
+    block_tables: jax.Array,  # (P, W) int32
+    starts: jax.Array,        # (P,) int32
+    limits: jax.Array,        # (P,) int32; 0 = filler row
+    *,
+    block_size: int,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Ragged chunked-prefill oracle. Returns (P, C, H, Dv) in q.dtype.
+
+    Filler rows (``limit == 0``) return zeros — their outputs are
+    discarded upstream, and the fused kernel skips them entirely.
+    """
+    P, W = block_tables.shape
+    C = q.shape[1]
+    KV, Dk = k_pool.shape[2], k_pool.shape[3]
+    Dv = v_pool.shape[3]
+    k_seq = k_pool[block_tables].reshape(P, W * block_size, KV, Dk)
+    v_seq = v_pool[block_tables].reshape(P, W * block_size, KV, Dv)
+
+    def one(q_r, k_r, v_r, off):
+        return flash_attention(q_r[None], k_r[None], v_r[None], causal=True,
+                               q_offset=off, window=window, scale=scale)[0]
+
+    out = jax.vmap(one)(q, k_seq, v_seq, starts.astype(jnp.int32))
+    live = (limits > 0)[:, None, None, None]
+    return jnp.where(live, out, jnp.zeros_like(out))
+
+
+def paged_mla_decode_attention(
+    q_lat: jax.Array,          # (B, H, R) absorbed nope queries
+    q_rope: jax.Array,         # (B, H, r) rope queries
+    ckv_pool: jax.Array,       # (N_blocks, block_size, R)
+    krope_pool: jax.Array,     # (N_blocks, block_size, r)
+    block_tables: jax.Array,   # (B, W) int32
+    lengths: jax.Array,        # (B,) int32
+    *,
+    block_size: int,
+    scale: float,
+) -> jax.Array:
+    """MLA absorbed paged decode oracle. Returns (B, H, R) f32."""
+    B, W = block_tables.shape
+    S = W * block_size
+    R, r = ckv_pool.shape[-1], krope_pool.shape[-1]
+    ckv = ckv_pool[block_tables].reshape(B, S, R).astype(jnp.float32)
+    kr = krope_pool[block_tables].reshape(B, S, r).astype(jnp.float32)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), ckv)
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), kr)) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p, ckv)
+
+
+# ---------------------------------------------------------------------------
 # Grouped (expert) matmul: ragged tokens -> per-expert matmul
 # ---------------------------------------------------------------------------
 def grouped_matmul(

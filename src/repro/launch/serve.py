@@ -31,7 +31,8 @@ def serve_plan(args):
                            4, -(-(args.prompt_len + args.max_new)
                                 // args.block_size) + 1),
                        max_slots=args.slots,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk,
+                       kernels=args.kernels)
     if args.disaggregate:
         return plans.serve_disagg(serve=scfg)
     return plans.serve(serve=scfg)
@@ -95,6 +96,12 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--kernels", default="auto",
+                    choices=("auto", "fused", "composed"),
+                    help="paged attention lowering: fused Pallas kernels "
+                         "(in-kernel block-table walk; interpret mode off-"
+                         "TPU) or the composed gather+dense path; auto = "
+                         "fused on TPU only")
     ap.add_argument("--disaggregate", action="store_true",
                     help="prefill/decode role split over device subgroups")
     ap.add_argument("--explain", action="store_true",

@@ -131,7 +131,8 @@ def attn_prefill(p, x, positions, cfg, *, window: Optional[int] = None):
 
 
 def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
-                      block_size: int, window: Optional[int] = None):
+                      block_size: int, window: Optional[int] = None,
+                      kernels: str = "composed"):
     """One-token decode against the paged KV pool (HyperServe).
 
     x: (B, 1, D) — one token per batch slot; ``positions``: (B,) absolute
@@ -144,6 +145,11 @@ def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     ``window`` (LOCAL_ATTN): keys below ``pos + 1 - window`` are masked,
     so the runtime may free their blocks (table entries repointed at the
     null block) without changing the result.
+
+    ``kernels="fused"`` lowers the attention to the block-table-walking
+    Pallas kernel — the cache is read once, straight from the pool, no
+    dense ``pool[block_tables]`` gather.  The token scatter stays outside
+    the kernel either way (it is the pool-state update, not attention).
     """
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -153,12 +159,16 @@ def attn_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     off = positions % block_size
     k_pool = kv["k"].at[bidx, off].set(k[:, 0])
     v_pool = kv["v"].at[bidx, off].set(v[:, 0])
-    W = block_tables.shape[1]
-    k_seq = k_pool[block_tables].reshape(B, W * block_size, KV, hd)
-    v_seq = v_pool[block_tables].reshape(B, W * block_size, KV, hd)
-    out = ops.decode_attention(q, k_seq, v_seq,
-                               (positions + 1).astype(jnp.int32),
-                               window=window)
+    lengths = (positions + 1).astype(jnp.int32)
+    if kernels == "fused":
+        out = ops.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         lengths, block_size=block_size,
+                                         window=window)
+    else:
+        W = block_tables.shape[1]
+        k_seq = k_pool[block_tables].reshape(B, W * block_size, KV, hd)
+        v_seq = v_pool[block_tables].reshape(B, W * block_size, KV, hd)
+        out = ops.decode_attention(q, k_seq, v_seq, lengths, window=window)
     y = out.reshape(B, 1, H * hd) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 
@@ -197,7 +207,8 @@ def flash_rows(q, k, v, starts, *, window=None, scale=None):
 
 
 def attn_prefill_paged(p, x, starts, limits, cfg, kv, block_tables, *,
-                       block_size: int, window: Optional[int] = None):
+                       block_size: int, window: Optional[int] = None,
+                       kernels: str = "composed"):
     """One batched chunked-prefill step against the paged KV pool.
 
     x: (P, C, D) — one prompt chunk per row, row ``r``'s first token at
@@ -219,10 +230,16 @@ def attn_prefill_paged(p, x, starts, limits, cfg, kv, block_tables, *,
                                        block_size=block_size)
     k_pool = kv["k"].at[bidx, off].set(k)
     v_pool = kv["v"].at[bidx, off].set(v)
-    W = block_tables.shape[1]
-    k_seq = k_pool[block_tables].reshape(P, W * block_size, KV, hd)
-    v_seq = v_pool[block_tables].reshape(P, W * block_size, KV, hd)
-    out = flash_rows(q, k_seq, v_seq, starts, window=window)
+    if kernels == "fused":
+        out = ops.ragged_prefill_attention(
+            q, k_pool, v_pool, block_tables,
+            starts.astype(jnp.int32), limits.astype(jnp.int32),
+            block_size=block_size, window=window)
+    else:
+        W = block_tables.shape[1]
+        k_seq = k_pool[block_tables].reshape(P, W * block_size, KV, hd)
+        v_seq = v_pool[block_tables].reshape(P, W * block_size, KV, hd)
+        out = flash_rows(q, k_seq, v_seq, starts, window=window)
     y = out.reshape(P, C, H * hd) @ p["wo"]
     return y, {"k": k_pool, "v": v_pool}
 

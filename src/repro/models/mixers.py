@@ -64,12 +64,20 @@ class MixerSpec:
     init_state: Callable       # (cfg, *, num_blocks, block_size, num_slots,
     #                             dtype) -> one-layer serving-state leaves
     decode_paged: Callable     # (p, h, positions, cfg, state, tables, *,
-    #                             block_size, window, slot_mask) -> (y, state)
+    #                             block_size, window, slot_mask, kernels)
+    #                             -> (y, state)
     prefill_paged: Callable    # (p, h, starts, limits, slots, cfg, state,
-    #                             tables, *, block_size, window) -> (y, state)
+    #                             tables, *, block_size, window, kernels)
+    #                             -> (y, state)
     #   batched: h (P, C, D); starts/limits/slots (P,) traced vectors;
     #   tables (P, W) — all scheduled prompt chunks in ONE call, filler
     #   rows padded to limit 0 / the null slot
+    # which serving hooks have a fused block-table-walking Pallas lowering
+    # under kernels="fused" (subset of ("decode", "prefill")); hooks not
+    # listed silently take their composed path — slot mixers have no
+    # table walk to fuse, MLA prefill needs in-kernel decompression
+    # (deferred)
+    fused_hooks: Tuple[str, ...] = ()
 
     def window(self, cfg) -> Optional[int]:
         """Static sliding window this mixer serves under (None = unbounded)."""
@@ -267,17 +275,17 @@ def _gate_slot_update(result, old_state, slot_mask):
 
 
 def _attn_decode_paged(p, h, positions, cfg, state, tables, *, block_size,
-                       window, slot_mask=None):
+                       window, slot_mask=None, kernels="composed"):
     return attention.attn_decode_paged(p["attn"], h, positions, cfg, state,
                                        tables, block_size=block_size,
-                                       window=window)
+                                       window=window, kernels=kernels)
 
 
 def _attn_prefill_paged(p, h, starts, limits, slots, cfg, state, tables, *,
-                        block_size, window):
+                        block_size, window, kernels="composed"):
     return attention.attn_prefill_paged(p["attn"], h, starts, limits, cfg,
                                         state, tables, block_size=block_size,
-                                        window=window)
+                                        window=window, kernels=kernels)
 
 
 for _kind, _state in ((ATTN, PAGED), (LOCAL_ATTN, WINDOWED)):
@@ -293,6 +301,7 @@ for _kind, _state in ((ATTN, PAGED), (LOCAL_ATTN, WINDOWED)):
         init_state=_attn_init_state,
         decode_paged=_attn_decode_paged,
         prefill_paged=_attn_prefill_paged,
+        fused_hooks=("decode", "prefill"),
     ))
 
 
@@ -315,13 +324,15 @@ register_mixer(MixerSpec(
     init_state=lambda cfg, *, num_blocks, block_size, num_slots, dtype:
         mla_mod.init_mla_pool(cfg, num_blocks, block_size, dtype),
     decode_paged=lambda p, h, positions, cfg, state, tables, *, block_size,
-        window, slot_mask=None: mla_mod.mla_decode_paged(
+        window, slot_mask=None, kernels="composed": mla_mod.mla_decode_paged(
             p["attn"], h, positions, cfg, state, tables,
-            block_size=block_size),
+            block_size=block_size, kernels=kernels),
     prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
-        block_size, window: mla_mod.mla_prefill_chunk_paged(
+        block_size, window, kernels="composed":
+        mla_mod.mla_prefill_chunk_paged(
             p["attn"], h, starts, limits, cfg, state, tables,
-            block_size=block_size),
+            block_size=block_size, kernels=kernels),
+    fused_hooks=("decode",),
 ))
 
 
@@ -342,10 +353,10 @@ register_mixer(MixerSpec(
     init_state=lambda cfg, *, num_blocks, block_size, num_slots, dtype:
         m2.init_mamba2_cache(cfg, num_slots, dtype),
     decode_paged=lambda p, h, positions, cfg, state, tables, *, block_size,
-        window, slot_mask=None: _gate_slot_update(
+        window, slot_mask=None, kernels="composed": _gate_slot_update(
             m2.mamba2_decode(p["mixer"], h, cfg, state), state, slot_mask),
     prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
-        block_size, window: m2.mamba2_prefill_chunk(
+        block_size, window, kernels="composed": m2.mamba2_prefill_chunk(
             p["mixer"], h, starts, limits, slots, cfg, state),
 ))
 
@@ -367,9 +378,9 @@ register_mixer(MixerSpec(
     init_state=lambda cfg, *, num_blocks, block_size, num_slots, dtype:
         rg_mod.init_rglru_cache(cfg, num_slots, dtype),
     decode_paged=lambda p, h, positions, cfg, state, tables, *, block_size,
-        window, slot_mask=None: _gate_slot_update(
+        window, slot_mask=None, kernels="composed": _gate_slot_update(
             rg_mod.rglru_decode(p["mixer"], h, cfg, state), state, slot_mask),
     prefill_paged=lambda p, h, starts, limits, slots, cfg, state, tables, *,
-        block_size, window: rg_mod.rglru_prefill_chunk(
+        block_size, window, kernels="composed": rg_mod.rglru_prefill_chunk(
             p["mixer"], h, starts, limits, slots, cfg, state),
 ))

@@ -91,7 +91,7 @@ def init_mla_pool(cfg, num_blocks: int, block_size: int, dtype):
 
 
 def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
-                     block_size: int):
+                     block_size: int, kernels: str = "composed"):
     """Absorbed-matmul decode against the paged latent pool (HyperServe).
 
     x: (B, 1, D) one token per slot; ``positions``: (B,) per-slot absolute
@@ -99,6 +99,11 @@ def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     R) / (N_blocks, block, rope); ``block_tables``: (B, W).  Gathered rows
     are indexed by absolute position, exactly like the dense latent cache,
     so the score/readout math is identical to :func:`mla_decode`.
+
+    ``kernels="fused"`` lowers the latent attention to the
+    block-table-walking Pallas kernel (``W_uk`` absorbed into the query
+    outside, ``W_uv`` read-out outside — the kernel works purely in the
+    rank-R latent space, no pool gather).
     """
     m = cfg.mla
     B = x.shape[0]
@@ -110,22 +115,29 @@ def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
     off = positions % block_size
     ckv_pool = kv["ckv"].at[bidx, off].set(c_new[:, 0])
     krope_pool = kv["krope"].at[bidx, off].set(kr_new[:, 0])
-    W = block_tables.shape[1]
-    S = W * block_size
-    ckv = ckv_pool[block_tables].reshape(B, S, m.kv_lora_rank)
-    krope = krope_pool[block_tables].reshape(B, S, m.qk_rope_head_dim)
 
     w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)       # (B,H,R)
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
-    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
-                    ckv.astype(jnp.float32))
-         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
-                      krope.astype(jnp.float32))) * scale
-    mask = jnp.arange(S)[None, None, :] < (positions + 1)[:, None, None]
-    s = jnp.where(mask, s, -1e30)
-    pr = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))
+    if kernels == "fused":
+        from repro.kernels import ops
+        o_lat = ops.paged_mla_decode_attention(
+            q_lat, q_rope[:, 0], ckv_pool, krope_pool, block_tables,
+            (positions + 1).astype(jnp.int32), block_size=block_size,
+            scale=scale)
+    else:
+        W = block_tables.shape[1]
+        S = W * block_size
+        ckv = ckv_pool[block_tables].reshape(B, S, m.kv_lora_rank)
+        krope = krope_pool[block_tables].reshape(B, S, m.qk_rope_head_dim)
+        s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+             + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                          krope.astype(jnp.float32))) * scale
+        mask = jnp.arange(S)[None, None, :] < (positions + 1)[:, None, None]
+        s = jnp.where(mask, s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
     y = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
@@ -133,7 +145,7 @@ def mla_decode_paged(p, x, positions, cfg, kv, block_tables, *,
 
 
 def mla_prefill_chunk_paged(p, x, starts, limits, cfg, kv, block_tables, *,
-                            block_size: int):
+                            block_size: int, kernels: str = "composed"):
     """One batched chunked-prefill step against the paged latent pool.
 
     Mirrors :func:`repro.models.attention.attn_prefill_paged`: every
@@ -142,7 +154,14 @@ def mla_prefill_chunk_paged(p, x, starts, limits, cfg, kv, block_tables, *,
     row's chunk queries attend its gathered table in decompressed form —
     the same flash kernel and scale the dense prefill uses, with per-row
     ``q_offset=starts[r]`` causal masking.
+
+    ``kernels`` is accepted for hook-signature uniformity but MLA prefill
+    always takes the composed path: the decompressed form needs
+    ``W_uk``/``W_uv`` applied to every gathered latent, so a fused
+    variant would need in-kernel decompression — deferred
+    (``MixerSpec.fused_hooks`` records decode-only fusion for MLA).
     """
+    del kernels
     from repro.models.attention import flash_rows, paged_chunk_indices
 
     m = cfg.mla

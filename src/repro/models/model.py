@@ -218,7 +218,8 @@ def _paged_ffn(p, x, cfg, ffn, moe_dispatch):
 
 
 def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
-                      *, block_size, slot_mask=None, moe_dispatch="gshard"):
+                      *, block_size, slot_mask=None, moe_dispatch="gshard",
+                      kernels="composed"):
     """Continuous-batching decode: one token per slot at per-slot positions.
 
     tokens: (B, 1) int32; positions: (B,) int32 absolute write positions
@@ -244,7 +245,8 @@ def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
                 y, kv2 = spec.decode_paged(
                     sub_p, rms_norm(h, sub_p["norm1"], cfg.norm_eps),
                     positions, cfg, kv, block_tables, block_size=block_size,
-                    window=spec.window(cfg), slot_mask=slot_mask)
+                    window=spec.window(cfg), slot_mask=slot_mask,
+                    kernels=kernels)
                 h = h + y
                 h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
                 new_kv.append(kv2)
@@ -262,7 +264,8 @@ def decode_step_paged(params, tokens, positions, cfg, kv_pools, block_tables,
 
 
 def prefill_chunk_paged(params, tokens, starts, limits, slots, cfg, kv_pools,
-                        block_tables, *, block_size, moe_dispatch="gshard"):
+                        block_tables, *, block_size, moe_dispatch="gshard",
+                        kernels="composed"):
     """One batched chunked-prefill step (HyperServe).
 
     tokens: (P, C) — every prompt chunk the scheduler admitted this
@@ -294,7 +297,8 @@ def prefill_chunk_paged(params, tokens, starts, limits, slots, cfg, kv_pools,
                 y, kv2 = spec.prefill_paged(
                     sub_p, rms_norm(h, sub_p["norm1"], cfg.norm_eps),
                     starts, limits, slots, cfg, kv, block_tables,
-                    block_size=block_size, window=spec.window(cfg))
+                    block_size=block_size, window=spec.window(cfg),
+                    kernels=kernels)
                 h = h + y
                 h = _paged_ffn(sub_p, h, cfg, kd[1], moe_dispatch)
                 new_kv.append(kv2)

@@ -71,7 +71,8 @@ def make_prefill_step(cfg, mesh: Optional[Mesh], plan, *, multimodal=False,
         _, cshapes = jax.eval_shape(prefill, pshapes, toks, pe)
         cache_sh = hypershard.make_cache_shardings(mesh, cshapes, plan,
                                                    batch=batch)
-        logits_sh = NamedSharding(mesh, P(dp_entry, None, "model"))
+        logits_sh = NamedSharding(mesh, P(dp_entry, None,
+                                          _vocab_axis(cfg, mesh)))
         out_sh = (logits_sh, cache_sh)
 
     if multimodal:
@@ -123,6 +124,20 @@ def _n(mesh, axes):
     for a in axes:
         n *= mesh.shape[a]
     return n
+
+
+def _vocab_axis(cfg, mesh) -> Optional[str]:
+    """The logits out-sharding's vocab-dim axis, or None when indivisible.
+
+    Heterogeneous fabric carves make odd model-axis sizes easy to reach
+    (e.g. a 6-device submesh under padded_vocab 1024).  An explicit
+    ``NamedSharding`` whose axis does not divide the dim is an XLA error
+    inside jit, so fall back to replicated logits — correctness over the
+    sharded unembed output; the matmul itself still runs tp-sharded.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    return "model" if cfg.padded_vocab % mesh.shape["model"] == 0 else None
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +198,8 @@ def make_pool_shardings(mesh: Optional[Mesh], pool_tree, plan):
 def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
                           block_size: int, pool_tree=None,
                           donate: bool = True,
-                          moe_dispatch: str = "gshard"):
+                          moe_dispatch: str = "gshard",
+                          kernels: str = "composed"):
     """Continuous-batching decode step: one token for every seated slot.
 
     Returns ``step(params, tokens (B,1), positions (B,), pools, tables
@@ -200,7 +216,8 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
             return M.decode_step_paged(params, tokens, positions, cfg, pools,
                                        tables, block_size=block_size,
                                        slot_mask=slot_mask,
-                                       moe_dispatch=moe_dispatch)
+                                       moe_dispatch=moe_dispatch,
+                                       kernels=kernels)
 
     donate_kw = {"donate_argnums": (3,)} if donate else {}
     if mesh is None:
@@ -211,7 +228,7 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
     rep = NamedSharding(mesh, P())
     tok_sh = NamedSharding(mesh, P(None, None))
     tab_sh = NamedSharding(mesh, P(None, None))
-    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    logits_sh = NamedSharding(mesh, P(None, None, _vocab_axis(cfg, mesh)))
     jitted = jax.jit(step,
                      in_shardings=(param_sh, tok_sh, rep, pool_sh, tab_sh,
                                    rep),
@@ -222,7 +239,8 @@ def make_paged_serve_step(cfg, mesh: Optional[Mesh], plan, *,
 def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
                             block_size: int, pool_tree=None,
                             donate: bool = True,
-                            moe_dispatch: str = "gshard"):
+                            moe_dispatch: str = "gshard",
+                            kernels: str = "composed"):
     """Batched chunked-prefill step: ``(params, tokens (P,C), starts (P,),
     limits (P,), slots (P,), pools, tables (P,W)) -> (last_logits (P,V),
     new pools)``.
@@ -243,7 +261,8 @@ def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
             return M.prefill_chunk_paged(params, tokens, starts, limits,
                                          slots, cfg, pools, tables,
                                          block_size=block_size,
-                                         moe_dispatch=moe_dispatch)
+                                         moe_dispatch=moe_dispatch,
+                                         kernels=kernels)
 
     donate_kw = {"donate_argnums": (5,)} if donate else {}
     if mesh is None:
@@ -254,7 +273,7 @@ def make_paged_prefill_step(cfg, mesh: Optional[Mesh], plan, *,
     rep = NamedSharding(mesh, P())
     tok_sh = NamedSharding(mesh, P(None, None))
     tab_sh = NamedSharding(mesh, P(None, None))
-    out0_sh = NamedSharding(mesh, P(None, "model"))
+    out0_sh = NamedSharding(mesh, P(None, _vocab_axis(cfg, mesh)))
     jitted = jax.jit(step,
                      in_shardings=(param_sh, tok_sh, rep, rep, rep, pool_sh,
                                    tab_sh),

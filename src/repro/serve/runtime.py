@@ -130,9 +130,15 @@ class ServeEngine:
             seed_fn=self._default_seed, obs=self.obs)
 
         # jit'd units ------------------------------------------------------
+        # plan-level kernels toggle -> lowering path, resolved ONCE so every
+        # step this engine dispatches takes the same path (and the
+        # serve.kernels.* counters pin it exactly)
+        from repro.kernels import ops
+        self.kernel_path = ops.resolve_paged_path(scfg.kernels)
         self._decode_step, _ = E.make_paged_serve_step(
             cfg, self.mesh, self.plan, block_size=scfg.block_size,
-            pool_tree=self.pool.state, donate=True, moe_dispatch=moe_dispatch)
+            pool_tree=self.pool.state, donate=True, moe_dispatch=moe_dispatch,
+            kernels=self.kernel_path)
         if prefill_group is None:
             # ONE batched step services every chunk the scheduler admits
             # per iteration (rows padded to the null slot) — a single jit
@@ -140,7 +146,7 @@ class ServeEngine:
             self._prefill_step, _ = E.make_paged_prefill_step(
                 cfg, self.mesh, self.plan, block_size=scfg.block_size,
                 pool_tree=self.pool.state, donate=True,
-                moe_dispatch=moe_dispatch)
+                moe_dispatch=moe_dispatch, kernels=self.kernel_path)
             self.params = params
             if self.mesh is not None:
                 pshapes = jax.eval_shape(lambda p: p, params)
@@ -378,6 +384,8 @@ class ServeEngine:
             tables[i, :len(req.table)] = req.table
             meta.append((i, req, n))
         self.obs.record_compile("paged_prefill", (Pb, C, W))
+        self.obs.metrics.counter(
+            f"serve.kernels.prefill.{self.kernel_path}").inc()
         with self.obs.trace.span("serve.prefill", track="engine",
                                  rows=len(reqs), bucket=Pb,
                                  rids=[r.rid for r in reqs]):
@@ -503,6 +511,8 @@ class ServeEngine:
                 tables[r.slot, :len(r.table)] = r.table
                 slot_mask[r.slot] = True
             self.obs.record_compile("paged_decode", (B, W))
+            self.obs.metrics.counter(
+                f"serve.kernels.decode.{self.kernel_path}").inc()
             t_dec = time.perf_counter()
             with self.obs.trace.span("serve.decode", track="engine",
                                      runners=len(runners)):

@@ -1,0 +1,165 @@
+"""Fused-kernel serving end-to-end: ``kernels="fused"`` must be
+token-identical to the sequential ``Generator`` across every attention
+family (ATTN, windowed LOCAL_ATTN in the hybrid stack, MLA), through
+preempt-and-restore, with the kernel-dispatch counters pinned exactly.
+
+Float32 configs so fp drift cannot flip an argmax — any divergence is a
+real kernel bug, not noise.  On CPU the fused path runs the Pallas
+kernels in interpret mode: the same program the TPU pipeline lowers,
+including the in-kernel block-table walk (see
+tests/test_paged_kernels.py for the no-gather proof).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ServeConfig, get_config
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+from tests.conftest import run_subprocess
+
+
+def _cfg(arch, **kw):
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32",
+                               **kw)
+
+
+def _assert_fused_parity(cfg, scfg, prompts, max_new):
+    assert scfg.kernels == "fused"
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    gen = Generator(cfg, params, max_len=128)
+    want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                         GenerateConfig(max_new_tokens=mn))[0, len(p):].tolist()
+            for p, mn in zip(prompts, max_new)]
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    assert serve.engine.kernel_path == "fused"
+    rids = [serve.submit(p, mn) for p, mn in zip(prompts, max_new)]
+    out = serve.join()
+    for i, rid in enumerate(rids):
+        assert out[rid] == want[i], f"{cfg.name} fused request {i} diverged"
+    return serve
+
+
+def test_attn_fused_serve_matches_generator():
+    cfg = _cfg("qwen2-0.5b")
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=3, prefill_chunk=4, kernels="fused")
+    serve = _assert_fused_parity(
+        cfg, scfg, [list(range(1, 9)), list(range(20, 33)),
+                    list(range(5, 10))], [6, 4, 8])
+    assert serve.stats()["finished"] == 3
+
+
+def test_local_attn_fused_serve_matches_generator():
+    """Hybrid stack: the windowed LOCAL_ATTN layer takes the fused kernels
+    (with the in-kernel window skip) while RG-LRU slot layers are
+    untouched; generation runs past the window so out-of-window block
+    freeing composes with the fused path."""
+    cfg = _cfg("recurrentgemma-2b", num_layers=3, sliding_window=16)
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=12,
+                       max_slots=2, prefill_chunk=4, kernels="fused")
+    _assert_fused_parity(cfg, scfg,
+                         [list(range(1, 9)), list(range(20, 33))], [20, 16])
+
+
+def test_mla_fused_serve_matches_generator():
+    """MLA decode runs the absorbed latent-space kernel over the
+    compressed pools; prefill stays composed (no fused prefill hook)."""
+    cfg = _cfg("deepseek-v2-lite-16b")
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=3, prefill_chunk=4, kernels="fused")
+    _assert_fused_parity(
+        cfg, scfg, [list(range(1, 9)), list(range(20, 33)),
+                    list(range(5, 10))], [6, 4, 8])
+
+
+def test_fused_preemption_spill_restore_exact():
+    """Pool pressure preempts, spills to host, restores — and the fused
+    decode resumes from restored pages token-exactly."""
+    cfg = _cfg("qwen2-0.5b")
+    scfg = ServeConfig(block_size=2, num_blocks=9, max_blocks_per_req=6,
+                       max_slots=2, prefill_chunk=4,
+                       enable_prefix_cache=False, kernels="fused")
+    serve = _assert_fused_parity(
+        cfg, scfg, [list(range(1, 5)), list(range(7, 11))], [8, 8])
+    assert serve.stats()["preemptions"] >= 1, \
+        "test must actually exercise preemption"
+
+
+def test_kernel_dispatch_counters_pinned():
+    """The serve.kernels.* counters record every batched dispatch on the
+    resolved path and ONLY that path.  Fixed workload -> exact counts:
+    prompts of 5 and 3 tokens admit chunks [4+3] then [1] (2 batched
+    prefill dispatches); the decode loop then runs 4 batched steps to
+    finish max_new 4 and 3.  Any drift means the dispatch discipline
+    changed (per-request dispatch creeping back, or a path leak)."""
+    cfg = _cfg("qwen2-0.5b")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=2, prefill_chunk=4, kernels="fused")
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    serve.submit([1, 2, 3, 4, 5], 4)
+    serve.submit([7, 8, 9], 3)
+    serve.join()
+    m = serve.engine.obs.metrics
+    assert m.counter("serve.kernels.decode.fused").value == 4
+    assert m.counter("serve.kernels.prefill.fused").value == 2
+    assert m.counter("serve.kernels.decode.composed").value == 0
+    assert m.counter("serve.kernels.prefill.composed").value == 0
+
+
+def test_composed_default_counters():
+    """kernels defaults to auto -> composed on CPU; counters must pin the
+    composed path with the same dispatch counts."""
+    cfg = _cfg("qwen2-0.5b")
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(block_size=4, num_blocks=40, max_blocks_per_req=8,
+                       max_slots=2, prefill_chunk=4)
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    assert serve.engine.kernel_path == "composed"
+    serve.submit([1, 2, 3, 4, 5], 4)
+    serve.submit([7, 8, 9], 3)
+    serve.join()
+    m = serve.engine.obs.metrics
+    assert m.counter("serve.kernels.decode.composed").value == 4
+    assert m.counter("serve.kernels.prefill.composed").value == 2
+    assert m.counter("serve.kernels.decode.fused").value == 0
+
+
+def test_vocab_indivisible_model_axis_serves():
+    """Regression: a model axis that does not divide padded_vocab (1024 on
+    6 devices) must fall back to replicated logits out-sharding instead of
+    crashing in jit — and still match the 1-device Generator exactly."""
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.base import get_config, ServeConfig
+from repro.core.hypershard import ShardingPlan
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.engine import GenerateConfig, Generator
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(), dtype="float32")
+assert cfg.padded_vocab % 6 != 0, "fixture must NOT divide the model axis"
+params = M.init_model(cfg, jax.random.PRNGKey(0))
+gen = Generator(cfg, params, max_len=64)
+prompts = [list(range(1, 9)), list(range(20, 33))]
+want = [gen.generate(jnp.asarray(p, jnp.int32)[None, :],
+                     GenerateConfig(max_new_tokens=5))[0, len(p):].tolist()
+        for p in prompts]
+
+mesh = make_host_mesh((1, 6))
+scfg = ServeConfig(block_size=4, num_blocks=48, max_blocks_per_req=8,
+                   max_slots=2, prefill_chunk=4)
+serve = HyperServe(cfg, params, serve_cfg=scfg, mesh=mesh,
+                   plan=ShardingPlan(fsdp=None))
+rids = [serve.submit(p, 5) for p in prompts]
+out = serve.join()
+for i, rid in enumerate(rids):
+    assert out[rid] == want[i], (i, out[rid], want[i])
+print("MESH6-VOCAB-FALLBACK-OK")
+""", devices=6, timeout=1200)

@@ -14,8 +14,17 @@ scheduler that stops overlapping, a serialised decode batch).
 Fails (exit 1) when a fresh ratio drops more than ``TOLERANCE`` (25%)
 below its baseline, or when any DETERMINISTIC counter (``DET_GATES``:
 chunks-per-jit-call, the HyperTrace jit recompile ledger, CoW prefix-hit
-accounting) differs from its baseline AT ALL — those are fixed-seed
-host-side decisions with no timing noise, so the tolerance is zero.
+accounting, fused-kernel parity bits) differs from its baseline AT ALL —
+those are fixed-seed host-side decisions with no timing noise, so the
+tolerance is zero.
+
+The fused paged kernels carry a third gate style (``KERNEL_GATES``): the
+perf-model overhead factor (measured / analytic-pure seconds, see
+``repro.kernels.perf_model``) must stay within a symmetric band of the
+checked-in baseline.  The band is wide (``KERNEL_TOLERANCE`` = 1.5x,
+i.e. [base/2.5, base*2.5]) because interpret-mode dispatch overhead is
+noisy; it still catches a kernel that silently starts visiting every
+page (the factor moves with work/shape, not host speed).
 Fresh artifacts are written under ``--out`` (default
 ``results/bench_gate/``) and folded into one ``bench_gate.json`` via
 :mod:`benchmarks.merge_results` for CI artifact upload — the checked-in
@@ -34,6 +43,7 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 sys.path.insert(0, ROOT)
 
 TOLERANCE = 0.25
+KERNEL_TOLERANCE = 1.5          # symmetric band on overhead factors
 
 # (artifact stem, path into the payload, human description).  The
 # wall-clock ratios are self-normalising (both sides share one process)
@@ -81,6 +91,35 @@ DET_GATES = (
      "prefix-affinity routing hits (shared system prompt)"),
     ("BENCH_fabric", ("affinity", "hit_rate"),
      "prefix-affinity hit rate"),
+    # fused paged kernels: interpret-mode output must match the composed
+    # oracle bit-for-bit within tolerance — recorded as a 0/1 parity bit
+    ("BENCH_kernels", ("cases", "paged_decode", "parity_ok"),
+     "fused paged-decode parity vs composed oracle"),
+    ("BENCH_kernels", ("cases", "mla_decode", "parity_ok"),
+     "fused MLA-decode parity vs composed oracle"),
+    ("BENCH_kernels", ("cases", "ragged_prefill", "parity_ok"),
+     "fused ragged-prefill parity vs composed oracle"),
+)
+
+# Perf-model drift gates: overhead_factor = measured / pure-work seconds
+# must stay within [base/(1+ktol), base*(1+ktol)].  Both directions gate:
+# a factor jump means the kernel does more work than the model predicts
+# (e.g. the page skip broke); a collapse means the model now overcounts
+# (cost function out of sync with the kernel).
+KERNEL_GATES = (
+    ("BENCH_kernels", ("cases", "paged_decode", "fused", "overhead_factor"),
+     "paged-decode fused overhead factor"),
+    ("BENCH_kernels", ("cases", "paged_decode", "composed", "overhead_factor"),
+     "paged-decode composed overhead factor"),
+    ("BENCH_kernels", ("cases", "mla_decode", "fused", "overhead_factor"),
+     "MLA-decode fused overhead factor"),
+    ("BENCH_kernels", ("cases", "mla_decode", "composed", "overhead_factor"),
+     "MLA-decode composed overhead factor"),
+    ("BENCH_kernels", ("cases", "ragged_prefill", "fused", "overhead_factor"),
+     "ragged-prefill fused overhead factor"),
+    ("BENCH_kernels", ("cases", "ragged_prefill", "composed",
+                       "overhead_factor"),
+     "ragged-prefill composed overhead factor"),
 )
 
 
@@ -95,9 +134,12 @@ def main(argv=None) -> int:
                     help="directory for the fresh artifacts + gate report")
     ap.add_argument("--tolerance", type=float, default=TOLERANCE,
                     help="allowed fractional ratio drop (default 0.25)")
+    ap.add_argument("--kernel-tolerance", type=float,
+                    default=KERNEL_TOLERANCE,
+                    help="symmetric overhead-factor band (default 1.5)")
     args = ap.parse_args(argv)
 
-    stems = sorted({g[0] for g in GATES + DET_GATES})
+    stems = sorted({g[0] for g in GATES + DET_GATES + KERNEL_GATES})
     baselines = {}
     for stem in stems:
         path = os.path.join(ROOT, "results", f"{stem}.json")
@@ -109,10 +151,12 @@ def main(argv=None) -> int:
     from benchmarks import common
     os.makedirs(args.out, exist_ok=True)
     common.RESULTS_DIR = args.out
-    from benchmarks import fabric_throughput, rl_throughput, serve_throughput
+    from benchmarks import (fabric_throughput, kernels_bench, rl_throughput,
+                            serve_throughput)
     serve_throughput.run()
     rl_throughput.run()
     fabric_throughput.run()
+    kernels_bench.run()
 
     fresh = {}
     for stem in stems:
@@ -139,22 +183,33 @@ def main(argv=None) -> int:
         if not ok:
             failures.append(desc)
 
+    for stem, path, desc in KERNEL_GATES:
+        base = float(_get(baselines[stem], path))
+        new = float(_get(fresh[stem], path))
+        band = 1.0 + args.kernel_tolerance
+        ok = base / band <= new <= base * band
+        print(f"{'OK  ' if ok else 'FAIL'} {desc}: x{new:.1f} vs baseline "
+              f"x{base:.1f} (band [x{base/band:.1f}, x{base*band:.1f}])")
+        if not ok:
+            failures.append(desc)
+
     from benchmarks.merge_results import merge
     merged = merge([os.path.join(args.out, f"{s}.json") for s in stems])
     merged["gate"] = {
         "tolerance": args.tolerance,
+        "kernel_tolerance": args.kernel_tolerance,
         "failures": failures,
         "checked": [{"artifact": s, "metric": "/".join(p),
                      "baseline": float(_get(baselines[s], p)),
                      "fresh": float(_get(fresh[s], p)),
                      "exact": (s, p, d) in DET_GATES}
-                    for s, p, d in GATES + DET_GATES],
+                    for s, p, d in GATES + DET_GATES + KERNEL_GATES],
     }
     out_path = os.path.join(args.out, "bench_gate.json")
     with open(out_path, "w") as f:
         json.dump(merged, f, indent=1, sort_keys=True)
-    print(f"{len(GATES) - len(failures)}/{len(GATES)} ratios within "
-          f"{args.tolerance:.0%} of baseline -> {out_path}")
+    total = len(GATES) + len(DET_GATES) + len(KERNEL_GATES)
+    print(f"{total - len(failures)}/{total} gates passed -> {out_path}")
     return 1 if failures else 0
 
 

@@ -294,6 +294,57 @@ def check_serve_state(session) -> int:
     return failures
 
 
+def check_kernels_api(session) -> int:
+    """Gate: the plan-level ``kernels`` toggle round-trips through
+    ``explain`` — every valid value resolves kernel-lowering rows whose
+    labels match the resolved path, and an invalid value is rejected with
+    a typed PlanError at validate time, never inside jit."""
+    from repro.api import PlanError, plans
+    from repro.configs.base import ServeConfig, get_config
+    from repro.kernels.ops import resolve_paged_path
+
+    failures = 0
+    cfg = get_config("qwen2-0.5b").reduced()
+    for kn in ("auto", "fused", "composed"):
+        try:
+            report = session.explain(
+                plans.serve(serve=ServeConfig(kernels=kn)), cfg,
+                for_serving=True)
+        except PlanError as e:
+            print(f"FAIL kernels={kn!r}: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        resolved = resolve_paged_path(kn)
+        rows = report.kernels
+        ok = bool(rows) and all(l.spec.startswith(f"{resolved}(")
+                                for l in rows)
+        print(f"{'OK  ' if ok else 'FAIL'} kernels={kn!r}: -> {resolved}, "
+              f"{len(rows)} kernel rows")
+        if not ok:
+            failures += 1
+    # MLA has a fused decode hook but no fused prefill hook — the report
+    # must say so rather than claim a kernel that doesn't exist
+    mla = get_config("deepseek-v2-lite-16b").reduced()
+    report = session.explain(plans.serve(serve=ServeConfig(kernels="fused")),
+                             mla, for_serving=True)
+    decode = [l for l in report.kernels if l.path.endswith("/decode")]
+    prefill = [l for l in report.kernels if l.path.endswith("/prefill")]
+    ok = (decode and all("paged_mla_decode" in l.spec for l in decode)
+          and prefill and all(l.spec.startswith("composed(") for l in prefill))
+    print(f"{'OK  ' if ok else 'FAIL'} kernels mla: fused decode + "
+          f"composed prefill ({len(decode)}+{len(prefill)} rows)")
+    if not ok:
+        failures += 1
+    try:
+        plans.serve(serve=ServeConfig(kernels="bogus")).validate()
+        print("FAIL kernels validation: kernels='bogus' was accepted")
+        failures += 1
+    except PlanError:
+        print("OK   kernels validation: invalid toggle rejected with a "
+              "typed PlanError")
+    return failures
+
+
 def main() -> int:
     import jax
 
@@ -306,6 +357,7 @@ def main() -> int:
     failures += check_obs_api()
     failures += check_mixer_registry()
     failures += check_serve_state(session)
+    failures += check_kernels_api(session)
     failures += check_rl_api(session)
     failures += check_fabric_api(session)
     for preset in PRESETS:
