@@ -1,0 +1,152 @@
+"""HyperMem benchmark: constrained-HBM serving vs unconstrained + planner.
+
+Two serving runs over the SAME deterministic workload (all requests
+submitted up front, greedy decoding):
+
+  - **unconstrained** — pool sized comfortably above the peak working
+    set: no preemption, the archive never fills;
+  - **constrained** — pool HBM budget strictly below the peak working
+    set AND a tiny archive host budget, so preempted state traverses
+    host -> disk -> predictive restore every time.
+
+The outputs must be token-identical (``parity.tokens_match``), and every
+HyperMem decision counter — preemptions, ``mem.prefetch.{hit,miss}``,
+``mem.restore_ahead.hit``, ``mem.evict.host`` — is deterministic (no
+decision reads wall-clock), so ``tools/bench_gate.py`` pins them
+**exactly**.  Throughput numbers are reported for the constrained-vs-
+unconstrained story but not gated (single-process CPU wall time includes
+compile noise).
+
+A third section runs the graph residency planner under a forcing budget
+split and reports the per-tier leaf counts + prefetch schedule length —
+also exact.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_json, row
+from repro.configs.base import ServeConfig, get_config
+from repro.models import model as M
+from repro.serve.api import HyperServe
+from repro.serve.paged_kv import blocks_for
+
+ARCH = "qwen2-0.5b"
+SEED = 0
+# fixed workload: ragged prompts, enough concurrent demand that the
+# constrained pool (8 usable blocks) sits well below the working set
+PROMPTS = [list(range(1, 9)), list(range(20, 33)), list(range(5, 10)),
+           list(range(40, 52))]
+MAX_NEW = [8, 8, 8, 8]
+
+BASE = dict(block_size=4, max_blocks_per_req=8, max_slots=3,
+            prefill_chunk=4, enable_prefix_cache=False)
+UNCONSTRAINED = ServeConfig(num_blocks=64, **BASE)
+CONSTRAINED = ServeConfig(num_blocks=9, archive_host_bytes=256,
+                          restore_lookahead=2, **BASE)
+
+
+def _cfg():
+    return dataclasses.replace(get_config(ARCH).reduced(), dtype="float32")
+
+
+def _serve_once(cfg, params, scfg):
+    serve = HyperServe(cfg, params, serve_cfg=scfg)
+    t0 = time.perf_counter()
+    rids = [serve.submit(p, mn) for p, mn in zip(PROMPTS, MAX_NEW)]
+    out = serve.join()
+    dt = time.perf_counter() - t0
+    st = serve.stats()
+    tokens = sum(len(v) for v in out.values())
+    return {
+        "tokens": tokens,
+        "wall_s": dt,
+        "tokens_per_sec": tokens / dt,
+        "counters": {
+            "preemptions": int(st["preemptions"]),
+            "prefetch_hits": int(st["prefetch_hits"]),
+            "prefetch_misses": int(st["prefetch_misses"]),
+            "restore_ahead_hits": int(st["restore_ahead_hits"]),
+            "evict_host": int(st["archive_evict_host"]),
+            "evict_disk": int(st["archive_evict_disk"]),
+        },
+    }, [out[r] for r in rids]
+
+
+def _residency(cfg):
+    """Graph planner under a forcing budget split: exact tier counts."""
+    from repro.core.offload import OffloadConfig
+    from repro.mem import DISK, HBM, HOST, plan_residency
+
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(
+        jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))))
+    rp = plan_residency(cfg, OffloadConfig(
+        policy="graph", hbm_budget_bytes=total // 3,
+        host_budget_bytes=total // 3, disk_budget_bytes=0))
+    return {
+        "param_bytes_total": total,
+        "leaves_hbm": rp.count_in(HBM),
+        "leaves_host": rp.count_in(HOST),
+        "leaves_disk": rp.count_in(DISK),
+        "bytes_hbm": rp.bytes_in(HBM),
+        "bytes_host": rp.bytes_in(HOST),
+        "bytes_disk": rp.bytes_in(DISK),
+        "schedule_steps": len(rp.schedule),
+        "graph_order": int(rp.graph_order),
+    }
+
+
+def run():
+    cfg = _cfg()
+    params = M.init_model(cfg, jax.random.PRNGKey(SEED))
+    working_set = sum(blocks_for(len(p) + mn, CONSTRAINED.block_size)
+                      for p, mn in zip(PROMPTS, MAX_NEW))
+    pool_blocks = CONSTRAINED.num_blocks - 1          # block 0 is null
+    assert working_set > pool_blocks, "workload must exceed the pool"
+
+    unc, out_u = _serve_once(cfg, params, UNCONSTRAINED)
+    con, out_c = _serve_once(cfg, params, CONSTRAINED)
+    ratio = con["tokens_per_sec"] / unc["tokens_per_sec"]
+    match = int(out_u == out_c)
+
+    row("offload.unconstrained_tok_s", 0.0,
+        f"{unc['tokens_per_sec']:.1f} tok/s "
+        f"(pool={UNCONSTRAINED.num_blocks - 1} blocks, no preemption)")
+    row("offload.constrained_tok_s", 0.0,
+        f"{con['tokens_per_sec']:.1f} tok/s (pool={pool_blocks} blocks < "
+        f"working set {working_set}; ratio {ratio:.2f}x)")
+    c = con["counters"]
+    row("offload.mem_counters", 0.0,
+        f"preempt={c['preemptions']} prefetch_hit={c['prefetch_hits']} "
+        f"miss={c['prefetch_misses']} restore_ahead={c['restore_ahead_hits']} "
+        f"evict_host={c['evict_host']} evict_disk={c['evict_disk']} "
+        f"parity={match}")
+
+    res = _residency(cfg)
+    row("offload.residency", 0.0,
+        f"hbm={res['leaves_hbm']} host={res['leaves_host']} "
+        f"disk={res['leaves_disk']} leaves, "
+        f"{res['schedule_steps']} prefetch steps (graph walk)")
+
+    payload = {
+        "arch": cfg.name,
+        "workload": {"requests": len(PROMPTS),
+                     "prompt_lens": [len(p) for p in PROMPTS],
+                     "max_new": MAX_NEW, "seed": SEED,
+                     "working_set_blocks": working_set,
+                     "constrained_pool_blocks": pool_blocks},
+        "unconstrained": unc,
+        "constrained": con,
+        "throughput_ratio": ratio,
+        "parity": {"tokens_match": match},
+        "residency": res,
+    }
+    path = emit_json("BENCH_offload.json", payload)
+    row("offload.artifact", 0.0, path)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -9,12 +9,15 @@ import traceback
 def main() -> None:
     from benchmarks import (fabric_throughput, hypershard_derive,
                             kernels_bench, mpmd_bubbles, mpmd_overlap,
-                            mpmd_rl, offload_serve, offload_train,
-                            rl_throughput, roofline, serve_throughput)
+                            mpmd_rl, offload_bench, offload_serve,
+                            offload_train, rl_throughput, roofline,
+                            serve_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("offload_train (paper §3.2 training)", offload_train),
         ("offload_serve (paper §3.2 inference)", offload_serve),
+        ("offload_bench (HyperMem constrained-HBM serving + planner)",
+         offload_bench),
         ("serve_throughput (HyperServe continuous batching)",
          serve_throughput),
         ("mpmd_overlap (paper §3.3a)", mpmd_overlap),

@@ -80,13 +80,19 @@ class PlanReport:
         return self.select("kernel")
 
     @property
+    def mem(self):
+        """HyperMem residency rows (``offload_policy="graph"``): planned
+        tier per parameter leaf + the layer-keyed prefetch slot."""
+        return self.select("mem")
+
+    @property
     def fallbacks(self) -> Tuple[LeafReport, ...]:
         return tuple(l for l in self.leaves if l.fell_back)
 
     def coverage(self) -> dict:
         return {"param": len(self.params), "opt": len(self.opt),
                 "cache": len(self.caches), "state": len(self.serve_state),
-                "kernel": len(self.kernels),
+                "kernel": len(self.kernels), "mem": len(self.mem),
                 "fallbacks": len(self.fallbacks)}
 
     def raise_on_fallback(self) -> "PlanReport":
@@ -116,6 +122,7 @@ class PlanReport:
                     f"{c['cache']} cache leaves, "
                     f"{c['state']} serving-state leaves, "
                     f"{c['kernel']} kernel rows, "
+                    f"{c['mem']} mem-residency rows, "
                     f"{c['fallbacks']} divisibility fallbacks")
         return "\n".join(rows)
 
@@ -234,6 +241,9 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
                         "kernel", f"{seg.name}/{j}.{spec.kind}/{hook}",
                         (), desc, "kernel", hook_rule, ()))
 
+    if plan.offload_policy == "graph":
+        leaves.extend(_mem_rows(plan, cfg))
+
     if plan.fabric is not None:
         leaves.extend(_fabric_rows(plan, layout))
 
@@ -256,6 +266,24 @@ def _kernel_lowering(spec, hook: str, resolved: str) -> str:
                 else "composed(gather+decode_attention)")
     return ("composed(gather+mla_prefill_chunk)" if mla
             else "composed(gather+flash_rows)")
+
+
+def _mem_rows(plan: HyperPlan, cfg):
+    """One row per parameter leaf under ``offload_policy="graph"``: the
+    HyperMem residency planner's tier in the memory column, the prefetch
+    slot in the spec column (kernel rows set the precedent for descriptive
+    spec strings), and the planner rule that fired."""
+    from repro.mem import plan_residency
+
+    rplan = plan_residency(cfg, plan.offload_config())
+    rows = []
+    for ml in rplan.leaves:
+        slot = ("resident" if ml.prefetch_step is None
+                else f"prefetch@layer{ml.prefetch_step}"
+                     f"(depth={rplan.prefetch_depth})")
+        rows.append(LeafReport("mem", ml.path, ml.shape, slot, ml.tier,
+                               ml.rule, ()))
+    return rows
 
 
 def _fabric_rows(plan: HyperPlan, layout: Layout):

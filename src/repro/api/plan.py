@@ -68,6 +68,14 @@ class HyperPlan:
     activation_offload: bool = False       # remat-offload layer residuals
     stream_layers: bool = False            # per-layer fetch pipeline (unrolled)
     prefetch_depth: int = 2                # layers resident in HBM at once
+    # HyperMem residency policy: "manual" keeps the flags above as the
+    # source of truth; "graph" derives per-leaf tier + prefetch slot from
+    # the jaxpr walk (repro.mem.plan_residency) under the per-tier byte
+    # budgets below (0 = unbounded), and explain() reports every row
+    offload_policy: str = "manual"         # "manual" | "graph"
+    hbm_budget_bytes: int = 0              # HBM tier budget (0 = unbounded)
+    host_budget_bytes: int = 0             # host-DRAM tier budget
+    disk_budget_bytes: int = 0             # disk tier budget
     # -- serving intent ----------------------------------------------------
     serve: Optional[ServeConfig] = None    # paged pool + scheduler knobs
     # -- RL post-training intent (paper §3.3c) -----------------------------
@@ -133,13 +141,30 @@ class HyperPlan:
                     f"OffloadConfig={ocfg.prefetch_depth}; set it in ONE place "
                     "(the HyperPlan)")
             depth = ocfg.prefetch_depth
+        policy = self.offload_policy
+        if ocfg.policy != "manual":
+            if policy != "manual" and policy != ocfg.policy:
+                raise PlanError(
+                    f"conflicting offload policy: plan={policy!r} vs legacy "
+                    f"OffloadConfig={ocfg.policy!r}; set it in ONE place "
+                    "(the HyperPlan)")
+            policy = ocfg.policy
+        budgets = {}
+        for f in ("hbm_budget_bytes", "host_budget_bytes",
+                  "disk_budget_bytes"):
+            mine, theirs = getattr(self, f), getattr(ocfg, f)
+            if theirs and mine and theirs != mine:
+                raise PlanError(
+                    f"conflicting {f}: plan={mine} vs legacy "
+                    f"OffloadConfig={theirs}; set it in ONE place")
+            budgets[f] = theirs or mine
         return self.replace(
             params_on_host=self.params_on_host or ocfg.params_on_host,
             opt_state_on_host=self.opt_state_on_host or ocfg.opt_state_on_host,
             activation_offload=(self.activation_offload
                                 or ocfg.activations_to_host),
             stream_layers=self.stream_layers or ocfg.stream_layers,
-            prefetch_depth=depth)
+            prefetch_depth=depth, offload_policy=policy, **budgets)
 
     # ------------------------------------------------------------------
     # lowerings (the single resolution step)
@@ -162,7 +187,11 @@ class HyperPlan:
                              opt_state_on_host=self.opt_state_on_host,
                              activations_to_host=self.activation_offload,
                              stream_layers=self.stream_layers,
-                             prefetch_depth=self.prefetch_depth)
+                             prefetch_depth=self.prefetch_depth,
+                             policy=self.offload_policy,
+                             hbm_budget_bytes=self.hbm_budget_bytes,
+                             host_budget_bytes=self.host_budget_bytes,
+                             disk_budget_bytes=self.disk_budget_bytes)
 
     def serve_config(self) -> ServeConfig:
         return self.serve if self.serve is not None else ServeConfig()
@@ -179,7 +208,10 @@ class HyperPlan:
     @property
     def wants_offload(self) -> bool:
         return (self.params_on_host or self.opt_state_on_host
-                or self.activation_offload)
+                or self.activation_offload
+                or (self.offload_policy == "graph"
+                    and bool(self.host_budget_bytes
+                             or self.disk_budget_bytes)))
 
     # ------------------------------------------------------------------
     # eager validation
@@ -205,6 +237,23 @@ class HyperPlan:
         if self.prefetch_depth < 1:
             raise PlanError(f"prefetch_depth must be >= 1, "
                             f"got {self.prefetch_depth}")
+        if self.offload_policy not in ("manual", "graph"):
+            raise PlanError(
+                f"offload_policy must be 'manual' or 'graph', got "
+                f"{self.offload_policy!r}")
+        for f in ("hbm_budget_bytes", "host_budget_bytes",
+                  "disk_budget_bytes"):
+            if getattr(self, f) < 0:
+                raise PlanError(f"{f} must be >= 0 (0 = unbounded), got "
+                                f"{getattr(self, f)}")
+        if self.offload_policy == "manual" and (
+                self.hbm_budget_bytes or self.host_budget_bytes
+                or self.disk_budget_bytes):
+            raise PlanError(
+                "per-tier byte budgets require offload_policy='graph' — "
+                "under 'manual' the params_on_host/opt_state_on_host flags "
+                "are the source of truth and the budgets would silently do "
+                "nothing")
         if self.stream_layers and not self.params_on_host:
             raise PlanError("stream_layers=True without params_on_host=True: "
                             "per-layer streaming fetches host-resident "

@@ -109,3 +109,13 @@ def offload_all(**over) -> HyperPlan:
     return HyperPlan(params_on_host=True, opt_state_on_host=True,
                      activation_offload=True,
                      name="offload_all").replace(**over)
+
+
+@register
+def offload_graph(**over) -> HyperPlan:
+    """HyperMem graph-driven residency: per-leaf tiers + a layer-keyed
+    prefetch schedule derived from the jaxpr walk (repro.mem).  Budgets
+    default to unbounded — set {hbm,host,disk}_budget_bytes to constrain;
+    explain() reports every leaf's tier, prefetch slot, and rule."""
+    return HyperPlan(offload_policy="graph",
+                     name="offload_graph").replace(**over)

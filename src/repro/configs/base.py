@@ -245,6 +245,14 @@ class ServeConfig:
     # copy-on-write prompt-prefix sharing
     enable_prefix_cache: bool = True
     prefix_cache_blocks: int = 32      # LRU cap on retained blocks
+    # HyperMem hierarchical archive: byte budgets for the preemption
+    # archive's host tier (LRU-spills to disk beyond this) and disk tier
+    # (typed MemCapacityError beyond that).  0 = unbounded.
+    archive_host_bytes: int = 0
+    archive_disk_bytes: int = 0
+    # predictive restore: stage archived pages/slot rows for PREEMPTED
+    # requests within this many queue positions of the head.  0 disables.
+    restore_lookahead: int = 2
     # attention lowering for the paged steps:
     #   "fused"    — block-table-walking Pallas kernels (one kernel per
     #                step, no pool gather; interpret mode off-TPU)
@@ -269,7 +277,9 @@ class ServeConfig:
                          ("max_blocks_per_req", 1), ("max_slots", 1),
                          ("max_queue", 1), ("prefill_chunk", 1),
                          ("prefill_chunks_per_step", 1), ("prefill_batch", 1),
-                         ("watermark_blocks", 0), ("prefix_cache_blocks", 0)):
+                         ("watermark_blocks", 0), ("prefix_cache_blocks", 0),
+                         ("archive_host_bytes", 0), ("archive_disk_bytes", 0),
+                         ("restore_lookahead", 0)):
             if getattr(self, knob) < lo:
                 problems.append(f"{knob}={getattr(self, knob)} (must be "
                                 f">= {lo})")

@@ -43,10 +43,21 @@ class HostArchive:
     whose backend has no host memory kind (the CPU test container) the
     placement is a no-op but the accounting — what the serving runtime
     budgets against — still works.
+
+    Since HyperMem the archive is **bounded**: storage is a
+    :class:`~repro.mem.tiers.TierStack`, so the host tier spills LRU
+    entries to disk at ``host_budget_bytes`` and a disk tier full of
+    pinned entries is a typed :class:`~repro.mem.tiers.MemCapacityError`
+    instead of a silent host OOM under sustained preemption.  Budgets of
+    0 keep the pre-HyperMem unbounded behaviour.  Evictions increment
+    the exact ``mem.evict.{host,disk}`` counters on ``obs`` when given.
     """
 
-    def __init__(self, mesh: Optional[Mesh] = None):
+    def __init__(self, mesh: Optional[Mesh] = None, *,
+                 host_budget_bytes: int = 0, disk_budget_bytes: int = 0,
+                 obs=None):
         from repro.core.compat import device_memory_kind, host_memory_kind
+        from repro.mem.tiers import TierStack
         self._host = None
         self._dev = None
         if mesh is not None:
@@ -60,7 +71,20 @@ class HostArchive:
             except (ValueError, TypeError):   # backend without memory kinds
                 self._host = None
                 self._dev = None
-        self._store: dict = {}
+        self._tiers = TierStack(host_budget_bytes, disk_budget_bytes)
+        self._obs = obs
+        self._seen = dict(self._tiers.counters)
+
+    def _sync_obs(self) -> None:
+        """Forward tier eviction deltas to the metrics registry."""
+        if self._obs is None:
+            return
+        for which, metric in (("evict_host", "mem.evict.host"),
+                              ("evict_disk", "mem.evict.disk")):
+            d = self._tiers.counters[which] - self._seen[which]
+            if d:
+                self._obs.metrics.counter(metric).inc(d)
+                self._seen[which] = self._tiers.counters[which]
 
     # -- placement ---------------------------------------------------------
     def to_host(self, x):
@@ -75,26 +99,45 @@ class HostArchive:
         return x
 
     # -- keyed store (spilled pages, archived blocks) ----------------------
-    def put(self, key, value) -> None:
-        self._store[key] = self.to_host(value)
+    def put(self, key, value, *, pinned: bool = True) -> None:
+        self._tiers.put(key, self.to_host(value), pinned=pinned)
+        self._sync_obs()
 
     def fetch(self, key, *, sharding=None, pop: bool = True):
-        value = self._store.pop(key) if pop else self._store[key]
+        # promote=False: a peek (pop=False) is the predictive-restore
+        # staging path, which keeps its own device copy — re-seating the
+        # entry in the host tier would only churn the LRU under tight
+        # budgets (evict counters must reflect real pressure, not peeks)
+        value, _ = self._tiers.get(key, pop=pop, promote=False)
+        self._sync_obs()
         return self.to_device(value, sharding)
 
     def __contains__(self, key) -> bool:
-        return key in self._store
+        return key in self._tiers
 
     def discard(self, key) -> None:
-        self._store.pop(key, None)
+        self._tiers.discard(key)
 
     def keys(self):
-        return self._store.keys()
+        return self._tiers.keys()
+
+    def tier_of(self, key) -> Optional[str]:
+        return self._tiers.tier_of(key)
+
+    @property
+    def counters(self) -> dict:
+        return self._tiers.counters
 
     def nbytes(self) -> int:
-        return sum(int(a.size) * a.dtype.itemsize
-                   for v in self._store.values()
-                   for a in jax.tree.leaves(v))
+        return self._tiers.nbytes()
+
+    def nbytes_host(self) -> int:
+        from repro.mem.tiers import HOST
+        return self._tiers.nbytes(HOST)
+
+    def nbytes_disk(self) -> int:
+        from repro.mem.tiers import DISK
+        return self._tiers.nbytes(DISK)
 
 
 @jax.jit

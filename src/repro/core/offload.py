@@ -48,6 +48,14 @@ class OffloadConfig:
     activations_to_host: bool = False
     stream_layers: bool = False           # per-layer pipeline (unrolled)
     prefetch_depth: int = 2               # layers resident in HBM at once
+    # HyperMem residency policy: "manual" keeps the flags above as the
+    # source of truth; "graph" derives per-leaf tiers + a layer-keyed
+    # prefetch schedule from the jaxpr walk (repro.mem.plan_residency)
+    # under the per-tier byte budgets below (0 = unbounded)
+    policy: str = "manual"
+    hbm_budget_bytes: int = 0
+    host_budget_bytes: int = 0
+    disk_budget_bytes: int = 0
 
 
 def with_memory_kind(shardings, kind: str):

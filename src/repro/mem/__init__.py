@@ -1,0 +1,31 @@
+"""HyperMem: graph-driven hierarchical memory (HBM -> host DRAM -> disk).
+
+- :mod:`repro.mem.tiers` — :class:`TierStack`, the capacity-accounted
+  host/disk store with deterministic LRU and typed
+  :class:`MemCapacityError`; backs ``core/kvcache.HostArchive``.
+- :mod:`repro.mem.planner` — :func:`plan_residency`, the jaxpr/HLO walk
+  that assigns every parameter leaf a tier and a layer-keyed prefetch
+  slot under per-tier byte budgets (``OffloadConfig(policy="graph")``).
+- :mod:`repro.mem.prefetcher` — :class:`Prefetcher`, the deterministic
+  lookahead staging buffer behind both layer streaming and the serve
+  path's predictive restore (``mem.prefetch.{hit,miss}`` /
+  ``mem.restore_ahead.hit`` counters).
+"""
+from repro.mem.planner import HBM, MemLeaf, ResidencyPlan, plan_residency
+from repro.mem.prefetcher import Prefetcher, run_schedule
+from repro.mem.tiers import (DISK, HOST, MemCapacityError, TierStack,
+                             tree_nbytes)
+
+__all__ = [
+    "HBM",
+    "HOST",
+    "DISK",
+    "MemCapacityError",
+    "TierStack",
+    "tree_nbytes",
+    "MemLeaf",
+    "ResidencyPlan",
+    "plan_residency",
+    "Prefetcher",
+    "run_schedule",
+]

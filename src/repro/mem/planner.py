@@ -1,0 +1,243 @@
+"""Graph-driven residency planner: walk the program, place every leaf.
+
+``plan_residency(cfg, offload)`` derives, from the model's **program
+graph** rather than from hand config, (a) the memory tier each parameter
+leaf should live in (HBM / host DRAM / disk) under per-tier byte
+budgets, and (b) a prefetch schedule keyed to layer index so the
+:class:`~repro.mem.prefetcher.Prefetcher` can double-buffer H2D copies
+``prefetch_depth`` layers ahead of use.
+
+The graph walk is a jaxpr scan: trace ``models.forward`` with
+``jax.make_jaxpr`` over shape structs (no device work), then record the
+first equation index that consumes each flattened parameter invar.  A
+``lax.scan`` over a stacked segment consumes all of that segment's
+leaves in one equation — exactly right, since the whole stacked leaf is
+fetched per segment.  Leaves the trace cannot order (or if tracing is
+unavailable) fall back to path order with the rule recorded, so the
+plan — and the explain() rows built from it — stays deterministic.
+
+Optional HLO refinement reuses :mod:`repro.launch.hlo_stats` to attach
+the op histogram + collective byte counts of the lowered step, and
+:func:`repro.core.overlap.overlap_efficiency` to estimate how much of
+the H2D prefetch time the per-layer compute masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.mem.tiers import DISK, HOST, MemCapacityError
+
+HBM = "hbm"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemLeaf:
+    """One parameter leaf's planned residency."""
+    path: str
+    shape: Tuple[int, ...]
+    nbytes: int
+    tier: str                     # "hbm" | "host" | "disk"
+    rule: str                     # which planner rule fired
+    first_use: int                # layer index of first consumption
+    layers: int                   # stacked layer count (1 if unstacked)
+    prefetch_step: Optional[int]  # layer step the first fetch is issued
+    #                               (None when resident in HBM)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPlan:
+    """Frozen residency + prefetch plan for one (cfg, OffloadConfig)."""
+    model: str
+    policy: str
+    budgets: Dict[str, Optional[int]]          # tier -> bytes (None = inf)
+    leaves: Tuple[MemLeaf, ...]
+    schedule: Tuple[Tuple[int, Tuple[str, ...]], ...]  # (step, keys) pairs
+    prefetch_depth: int
+    graph_order: bool                          # jaxpr walk succeeded
+    hlo: Optional[dict] = None                 # op histogram / collectives
+
+    def bytes_in(self, tier: str) -> int:
+        return sum(l.nbytes for l in self.leaves if l.tier == tier)
+
+    def count_in(self, tier: str) -> int:
+        return sum(1 for l in self.leaves if l.tier == tier)
+
+    def schedule_dict(self) -> Dict[int, Tuple[str, ...]]:
+        return dict(self.schedule)
+
+    def leaf(self, path: str) -> MemLeaf:
+        for l in self.leaves:
+            if l.path == path:
+                return l
+        raise KeyError(path)
+
+
+def _first_use_order(cfg, pshapes, paths):
+    """Map leaf index -> rank of the first jaxpr equation consuming it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+
+    toks = jax.ShapeDtypeStruct((1, 8), jnp.int32)
+    closed = jax.make_jaxpr(
+        lambda p, t: M.forward(p, t, cfg, mode="train", remat=False))(
+            pshapes, toks)
+    flat, _ = jax.tree_util.tree_flatten(pshapes)
+    invar_to_leaf = {id(v): i for i, v in
+                     enumerate(closed.jaxpr.invars[:len(flat)])}
+    first: Dict[int, int] = {}
+    for ei, eqn in enumerate(closed.jaxpr.eqns):
+        for v in eqn.invars:
+            li = invar_to_leaf.get(id(v))
+            if li is not None and li not in first:
+                first[li] = ei
+    # unconsumed leaves (e.g. unembed under tie_embeddings tricks) sort last
+    n_eqns = len(closed.jaxpr.eqns)
+    return [first.get(i, n_eqns) for i in range(len(paths))]
+
+
+def _segment_layer_spans(cfg) -> Dict[str, Tuple[int, int]]:
+    """``seg{i}`` -> (first global layer index, stacked layer count)."""
+    from repro.models.mixers import segments
+
+    spans, start = {}, 0
+    for si, seg in enumerate(segments(cfg)):
+        spans[f"seg{si}"] = (start, seg.repeat)
+        start += seg.repeat
+    return spans
+
+
+def plan_residency(cfg, offload, *, with_hlo: bool = False) -> ResidencyPlan:
+    """Derive per-leaf residency tiers + a layer-keyed prefetch schedule.
+
+    Budgets come from ``offload`` (``hbm_budget_bytes`` etc.; 0 means
+    unbounded).  Greedy assignment in first-use order: earliest-used
+    leaves claim HBM first, overflow cascades to host then disk, and a
+    workload that does not fit even on disk is a plan-time
+    :class:`~repro.mem.tiers.MemCapacityError` — never a runtime OOM.
+    """
+    import jax
+
+    from repro.core import hypershard
+    from repro.models import model as M
+
+    pshapes = jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+    paths, pleaves, _ = hypershard.tree_paths(pshapes)
+
+    graph_order, order_note = True, ""
+    try:
+        order = _first_use_order(cfg, pshapes, paths)
+    except Exception as e:  # pragma: no cover - trace fallback
+        graph_order = False
+        order_note = f"; path order (graph walk unavailable: {type(e).__name__})"
+        order = list(range(len(paths)))
+
+    spans = _segment_layer_spans(cfg)
+    budgets = {HBM: offload.hbm_budget_bytes or None,
+               HOST: offload.host_budget_bytes or None,
+               DISK: offload.disk_budget_bytes or None}
+    free = dict(budgets)
+    depth = max(int(offload.prefetch_depth), 0)
+
+    entries = []
+    for i, (path, leaf) in enumerate(zip(paths, pleaves)):
+        seg = path.split("/", 1)[0]
+        layer0, layers = spans.get(seg, (0, 1))
+        nbytes = leaf.size * leaf.dtype.itemsize
+        entries.append((order[i], path, tuple(leaf.shape), nbytes,
+                        layer0, layers))
+    entries.sort(key=lambda e: (e[0], e[1]))   # first-use rank, path tiebreak
+
+    def take(tier, nbytes):
+        if free[tier] is None:
+            return True
+        if free[tier] >= nbytes:
+            free[tier] -= nbytes
+            return True
+        return False
+
+    leaves = []
+    for _, path, shape, nbytes, layer0, layers in entries:
+        if len(shape) < 2:
+            # 1-D leaves are not host-placeable (spec_fully_sharded
+            # selectivity) — pin to HBM regardless of budget pressure
+            tier, rule = HBM, "pinned: 1-D leaf (not host-placeable)"
+            if not take(HBM, nbytes):
+                raise MemCapacityError(
+                    f"hbm budget {budgets[HBM]} cannot hold pinned leaf "
+                    f"{path} ({nbytes} bytes)")
+        elif take(HBM, nbytes):
+            tier = HBM
+            rule = ("graph: hbm unbounded" if budgets[HBM] is None
+                    else "graph: fits hbm budget")
+        elif take(HOST, nbytes):
+            tier, rule = HOST, "graph: hbm full -> host"
+        elif take(DISK, nbytes):
+            tier, rule = DISK, "graph: host full -> disk"
+        else:
+            raise MemCapacityError(
+                f"leaf {path} ({nbytes} bytes) exceeds every tier budget "
+                f"(hbm={budgets[HBM]}, host={budgets[HOST]}, "
+                f"disk={budgets[DISK]})")
+        prefetch = None if tier == HBM else max(0, layer0 - depth)
+        leaves.append(MemLeaf(path, shape, nbytes, tier, rule + order_note,
+                              layer0, layers, prefetch))
+
+    # prefetch schedule: step -> keys fetched at that layer step.  Stacked
+    # leaves are fetched once per layer slice ("path@layer"); unstacked
+    # offloaded leaves once at their own slot.
+    sched: Dict[int, list] = {}
+    for l in leaves:
+        if l.tier == HBM:
+            continue
+        for k in range(l.layers):
+            step = max(0, l.first_use + k - depth)
+            key = f"{l.path}@{l.first_use + k}" if l.layers > 1 else l.path
+            sched.setdefault(step, []).append(key)
+    schedule = tuple(sorted((s, tuple(sorted(ks)))
+                            for s, ks in sched.items()))
+
+    hlo = _hlo_summary(cfg) if with_hlo else None
+    return ResidencyPlan(getattr(cfg, "name", str(cfg)),
+                         getattr(offload, "policy", "graph"), budgets,
+                         tuple(leaves), schedule, depth, graph_order, hlo)
+
+
+def _hlo_summary(cfg) -> Optional[dict]:
+    """Lower one forward step and summarise it with launch.hlo_stats +
+    an analytic estimate of how well prefetch hides under compute."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.offload import D2H_BW
+    from repro.core.overlap import overlap_efficiency
+    from repro.launch import hlo_stats
+    from repro.models import model as M
+
+    try:
+        pshapes = jax.eval_shape(
+            lambda: M.init_model(cfg, jax.random.PRNGKey(0)))
+        toks = jax.ShapeDtypeStruct((1, 8), jnp.int32)
+        compiled = jax.jit(
+            lambda p, t: M.forward(p, t, cfg, mode="train",
+                                   remat=False)).lower(pshapes, toks).compile()
+        text = compiled.as_text()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        flops = float(ca.get("flops", 0.0))
+        pbytes = sum(l.size * l.dtype.itemsize
+                     for l in jax.tree.leaves(pshapes))
+        # compute seconds per layer vs H2D seconds per layer, masked over
+        # cfg.num_layers chunks (the overlap.py double-buffer model)
+        n = max(cfg.num_layers, 1)
+        compute_s = flops / 1e12 / n          # 1 TF/s/chip floor
+        h2d_s = pbytes / D2H_BW / n
+        eff = overlap_efficiency(compute_s * n, h2d_s * n, n)
+        return {"ops": hlo_stats.op_histogram(text, top=10),
+                "collectives": hlo_stats.collective_stats(text),
+                "prefetch_overlap_efficiency": eff}
+    except Exception:  # pragma: no cover - backend-dependent lowering
+        return None

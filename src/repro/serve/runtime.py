@@ -119,7 +119,17 @@ class ServeEngine:
         if pool_sh is not None:
             self.pool.state = jax.tree.map(jax.device_put, self.pool.state,
                                            pool_sh)
-        self.blocks = BlockManager(self.pcfg, HostArchive(self.mesh))
+        # HyperMem: the archive is a bounded host->disk tier stack (0 =
+        # unbounded), and a lookahead prefetcher stages restores for
+        # requests nearing the queue head (StepPlan.near_head)
+        self.blocks = BlockManager(self.pcfg, HostArchive(
+            self.mesh, host_budget_bytes=scfg.archive_host_bytes,
+            disk_budget_bytes=scfg.archive_disk_bytes, obs=self.obs))
+        from repro.mem import Prefetcher
+        self._restore_prefetch = Prefetcher(
+            lambda key: self.blocks.archive.fetch(key, pop=False),
+            depth=max(1, 2 * scfg.restore_lookahead), obs=self.obs)
+        self.restore_ahead_hits = 0
         self.scheduler = ContinuousScheduler(
             scfg.scheduler_config(), self.blocks, scfg.block_size,
             scfg.max_blocks_per_req,
@@ -209,17 +219,46 @@ class ServeEngine:
         return bids
 
     def _restore_inner(self, req: Request) -> List[int]:
-        bids = self.blocks.restore(req.archive_key, self.pool.insert_pages)
+        # allocate BEFORE consuming staged state: NoFreeBlocks aborts the
+        # resume with both the archive entries and the prefetch buffer
+        # intact, so the retry next iteration is identical (and a staged
+        # copy still scores its restore-ahead hit when it finally seats)
+        pf = self._restore_prefetch
+        bids = self.blocks.alloc(req.spilled_blocks)
+        pages, hit = pf.take(req.archive_key)     # mem.prefetch.{hit,miss}
+        self.blocks.archive.discard(req.archive_key)
+        self.pool.insert_pages(pages, bids)
         # the scheduler seats req.slot before invoking this callback, so
         # the dense slot rows re-seat HERE — atomically with the pages.
         # (Seating later, in step(), loses a same-cycle re-preemption
         # race: _spill would archive the seat's stale rows.)
         if self.layout.has_slot_state:
-            self.pool.insert_slot(req.slot,
-                                  self.blocks.archive.fetch(
-                                      req.slot_archive_key))
+            rows, slot_hit = pf.take(req.slot_archive_key)
+            self.blocks.archive.discard(req.slot_archive_key)
+            self.pool.insert_slot(req.slot, rows)
+            hit = hit and slot_hit
+        if hit:
+            # every byte of this request's archived state was already
+            # moving (or seated) before _admit asked for it
+            self.restore_ahead_hits += 1
+            self.obs.metrics.counter("mem.restore_ahead.hit").inc()
         # window-freed entries were a table prefix; rebuild alignment
         return [BlockManager.NULL] * req.null_prefix + bids
+
+    def _stage_restores(self, near: List[Request]) -> None:
+        """Predictive restore: start pulling archived pages / slot rows
+        for PREEMPTED requests nearing the queue head.  The fetch is an
+        async host->device copy (pop=False — the archive entry survives
+        until the real restore commits), so it overlaps this iteration's
+        compute exactly like the core/overlap double buffer."""
+        pf = self._restore_prefetch
+        arch = self.blocks.archive
+        pf.prune(lambda k: k in arch)     # cancelled requests drop staged
+        for req in near:
+            if req.archive_key in arch:
+                pf.stage(req.archive_key)
+            if self.layout.has_slot_state and req.slot_archive_key in arch:
+                pf.stage(req.slot_archive_key)
 
     def _reclaim(self, n: int) -> int:
         """Evict LRU prefix-cache entries until >= n blocks are freed."""
@@ -467,6 +506,8 @@ class ServeEngine:
     def step(self) -> List[Tuple[int, int]]:
         """One scheduler+compute iteration.  Returns [(rid, new token)]."""
         plan = self.scheduler.schedule()
+        if plan.near_head or self._restore_prefetch.entries:
+            self._stage_restores(plan.near_head)
         if self.layout.has_slot_state:
             # fresh admissions must not inherit the previous occupant's
             # recurrence (resumed requests were re-seated inside _restore,
@@ -556,7 +597,10 @@ class ServeEngine:
         occ = self.blocks.occupancy()
         m.gauge("serve.block_occupancy").set(occ)
         m.gauge("serve.blocks_free").set(self.blocks.num_free)
-        m.gauge("serve.archive_host_bytes").set(self.blocks.archive.nbytes())
+        m.gauge("serve.archive_host_bytes").set(
+            self.blocks.archive.nbytes_host())
+        m.gauge("serve.archive_disk_bytes").set(
+            self.blocks.archive.nbytes_disk())
         m.gauge("serve.pool_hbm_bytes").set(self.pool.hbm_bytes())
         m.gauge("serve.prefix_cache_blocks").set(
             sum(len(v) for v in self._prefix_cache.values()))
@@ -637,7 +681,16 @@ class ServeEngine:
             "prefill_calls": self.prefill_calls,
             "prefill_chunks": self.prefill_chunks,
             "pool_hbm_bytes": self.pool.hbm_bytes(),
-            "archive_host_bytes": self.blocks.archive.nbytes(),
+            # per-tier archive accounting (HyperMem): host DRAM vs the
+            # disk tier the bounded archive spills into, plus how often
+            # predictive restore had the state moving before it was seated
+            "archive_host_bytes": self.blocks.archive.nbytes_host(),
+            "archive_disk_bytes": self.blocks.archive.nbytes_disk(),
+            "archive_evict_host": self.blocks.archive.counters["evict_host"],
+            "archive_evict_disk": self.blocks.archive.counters["evict_disk"],
+            "restore_ahead_hits": self.restore_ahead_hits,
+            "prefetch_hits": self._restore_prefetch.counters["hit"],
+            "prefetch_misses": self._restore_prefetch.counters["miss"],
             "prefix_cache_blocks": sum(len(v)
                                        for v in self._prefix_cache.values()),
             "ttft_p50_s": ttft.percentile(50),

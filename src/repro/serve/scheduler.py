@@ -133,6 +133,12 @@ class SchedulerConfig:
     # the default — it buys device-level batching, not extra launches
     prefill_chunks_per_step: int = 4
     watermark_blocks: int = 1          # admission headroom for decode growth
+    # predictive restore (HyperMem): preempted requests within this many
+    # positions of the queue head are surfaced in StepPlan.near_head so
+    # the runtime can start pulling their archived pages / slot rows back
+    # BEFORE they are seated.  Queue-position proximity, never wall-clock,
+    # so the mem.restore_ahead.hit counter is exact.  0 disables.
+    restore_lookahead: int = 2
 
 
 @dataclasses.dataclass
@@ -143,6 +149,9 @@ class StepPlan:
     admitted: List[Request] = dataclasses.field(default_factory=list)
     resumed: List[Request] = dataclasses.field(default_factory=list)
     preempted: List[Request] = dataclasses.field(default_factory=list)
+    # PREEMPTED requests close enough to the queue head that their archived
+    # state should start moving back now (predictive restore)
+    near_head: List[Request] = dataclasses.field(default_factory=list)
 
 
 class ContinuousScheduler:
@@ -258,6 +267,13 @@ class ContinuousScheduler:
         self._admit(plan)
         self._plan_prefill(plan)
         self._plan_decode(plan)
+        # queue-head proximity AFTER this step's admissions/preemptions:
+        # the runtime stages these requests' archived state this iteration
+        # so a later _admit consumes an already-moving copy
+        plan.near_head = [
+            r for r in itertools.islice(self.queue,
+                                        self.cfg.restore_lookahead)
+            if r.state is RequestState.PREEMPTED]
         return plan
 
     def _ensure_free(self, n: int) -> bool:

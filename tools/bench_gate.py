@@ -99,6 +99,28 @@ DET_GATES = (
      "fused MLA-decode parity vs composed oracle"),
     ("BENCH_kernels", ("cases", "ragged_prefill", "parity_ok"),
      "fused ragged-prefill parity vs composed oracle"),
+    # HyperMem: preemption, prefetch staging, restore-ahead and tier
+    # eviction are pure queue-position / budget decisions (no wall-clock),
+    # so the constrained-HBM run's counters — and its token parity with
+    # the unconstrained run — are exact
+    ("BENCH_offload", ("parity", "tokens_match"),
+     "constrained-HBM outputs token-identical to unconstrained"),
+    ("BENCH_offload", ("constrained", "counters", "preemptions"),
+     "constrained-pool preemption count"),
+    ("BENCH_offload", ("constrained", "counters", "prefetch_hits"),
+     "mem.prefetch.hit — restores staged before they were needed"),
+    ("BENCH_offload", ("constrained", "counters", "prefetch_misses"),
+     "mem.prefetch.miss — unstaged (reactive) restores"),
+    ("BENCH_offload", ("constrained", "counters", "restore_ahead_hits"),
+     "mem.restore_ahead.hit — fully predictive re-seats"),
+    ("BENCH_offload", ("constrained", "counters", "evict_host"),
+     "mem.evict.host — archive host tier LRU spills to disk"),
+    ("BENCH_offload", ("residency", "leaves_host"),
+     "graph residency planner: host-tier leaves under forcing budgets"),
+    ("BENCH_offload", ("residency", "leaves_disk"),
+     "graph residency planner: disk-tier leaves under forcing budgets"),
+    ("BENCH_offload", ("residency", "schedule_steps"),
+     "graph residency planner: prefetch schedule length"),
 )
 
 # Perf-model drift gates: overhead_factor = measured / pure-work seconds
@@ -151,12 +173,13 @@ def main(argv=None) -> int:
     from benchmarks import common
     os.makedirs(args.out, exist_ok=True)
     common.RESULTS_DIR = args.out
-    from benchmarks import (fabric_throughput, kernels_bench, rl_throughput,
-                            serve_throughput)
+    from benchmarks import (fabric_throughput, kernels_bench, offload_bench,
+                            rl_throughput, serve_throughput)
     serve_throughput.run()
     rl_throughput.run()
     fabric_throughput.run()
     kernels_bench.run()
+    offload_bench.run()
 
     fresh = {}
     for stem in stems:

@@ -17,7 +17,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-PRESETS = ("fsdp_tp", "offload_all")
+PRESETS = ("fsdp_tp", "offload_all", "offload_graph")
 ARCHS = ("qwen2-0.5b", "deepseek-moe-16b")
 # one config per serving-state family: paged / slot / windowed+slot / MLA
 SERVE_ARCHS = ("qwen2-0.5b", "mamba2-370m", "recurrentgemma-2b",
@@ -345,6 +345,81 @@ def check_kernels_api(session) -> int:
     return failures
 
 
+def check_mem_api(session) -> int:
+    """Gate: the HyperMem surface — ``repro.mem`` exports, the
+    ``offload_policy`` validation, and the explain() residency rows
+    (per-leaf tier + prefetch slot + rule) under ``policy="graph"``."""
+    import jax
+
+    from repro.api import PlanError, plans
+    from repro.configs.base import ServeConfig, get_config
+    from repro.models import model as M
+
+    MEM_EXPORTS = ("TierStack", "MemCapacityError", "Prefetcher",
+                   "ResidencyPlan", "MemLeaf", "plan_residency",
+                   "run_schedule", "tree_nbytes")
+    failures = 0
+    import repro.mem as mem
+    missing = [n for n in MEM_EXPORTS
+               if n not in mem.__all__ or not hasattr(mem, n)]
+    if missing:
+        print(f"FAIL mem exports: missing {missing}")
+        failures += 1
+    else:
+        print(f"OK   mem exports: {len(MEM_EXPORTS)} names")
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    n_params = len(jax.tree.leaves(jax.eval_shape(
+        lambda: M.init_model(cfg, jax.random.PRNGKey(0)))))
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(
+        jax.eval_shape(lambda: M.init_model(cfg, jax.random.PRNGKey(0)))))
+    report = session.explain(
+        plans.offload_graph(hbm_budget_bytes=total // 3,
+                            host_budget_bytes=total // 3), cfg)
+    rows = report.mem
+    tiers = {l.memory for l in rows}
+    ok = (len(rows) == n_params
+          and tiers <= {"hbm", "host", "disk"} and len(tiers) > 1
+          and all(l.rule for l in rows)
+          and all(l.spec == "resident" or "prefetch@" in str(l.spec)
+                  for l in rows))
+    print(f"{'OK  ' if ok else 'FAIL'} mem explain rows: {len(rows)}/"
+          f"{n_params} leaves across tiers {sorted(tiers)}")
+    if not ok:
+        failures += 1
+
+    for bad, match in ((dict(offload_policy="bogus"), "offload_policy"),
+                       (dict(hbm_budget_bytes=-1), "budget"),
+                       (dict(offload_policy="manual", hbm_budget_bytes=1),
+                        "manual + budgets")):
+        try:
+            plans.get("fsdp_tp")().replace(**bad).validate()
+            print(f"FAIL mem validation: {bad} was accepted")
+            failures += 1
+        except PlanError:
+            print(f"OK   mem validation: {match} rejected with a typed "
+                  "PlanError")
+    try:
+        ServeConfig(restore_lookahead=-1).validate()
+        print("FAIL mem validation: restore_lookahead=-1 was accepted")
+        failures += 1
+    except PlanError:
+        print("OK   mem validation: negative restore_lookahead rejected")
+
+    from repro.core.offload import OffloadConfig
+    from repro.mem import MemCapacityError, plan_residency
+    try:
+        plan_residency(cfg, OffloadConfig(policy="graph",
+                                          hbm_budget_bytes=1024,
+                                          host_budget_bytes=1024,
+                                          disk_budget_bytes=1024))
+        print("FAIL mem planner: impossible budgets were accepted")
+        failures += 1
+    except MemCapacityError:
+        print("OK   mem planner: impossible budgets raise MemCapacityError")
+    return failures
+
+
 def main() -> int:
     import jax
 
@@ -360,6 +435,7 @@ def main() -> int:
     failures += check_kernels_api(session)
     failures += check_rl_api(session)
     failures += check_fabric_api(session)
+    failures += check_mem_api(session)
     for preset in PRESETS:
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
