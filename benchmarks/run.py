@@ -10,8 +10,8 @@ def main() -> None:
     from benchmarks import (fabric_throughput, hypershard_derive,
                             kernels_bench, mpmd_bubbles, mpmd_overlap,
                             mpmd_rl, offload_bench, offload_serve,
-                            offload_train, rl_throughput, roofline,
-                            serve_throughput)
+                            offload_train, pipeline_bench, rl_throughput,
+                            roofline, serve_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("offload_train (paper §3.2 training)", offload_train),
@@ -27,6 +27,7 @@ def main() -> None:
          rl_throughput),
         ("fabric_throughput (HyperFabric multi-tenant SLO serving)",
          fabric_throughput),
+        ("pipeline_bench (Mpipe 1F1B schedule + parity)", pipeline_bench),
         ("hypershard (paper §3.4)", hypershard_derive),
         ("kernels", kernels_bench),
         ("roofline (deliverable g)", roofline),

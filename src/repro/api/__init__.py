@@ -12,8 +12,8 @@ an engine this layer resolves plans into; new entry points go through
 here (see ROADMAP.md).
 """
 from repro.api.errors import (FabricPlanError, HostMemoryError,
-                              IndivisibleError, PlanError, ServePlanError,
-                              TopologyError, UnknownAxisError)
+                              IndivisibleError, PipelinePlanError, PlanError,
+                              ServePlanError, TopologyError, UnknownAxisError)
 from repro.api.explain import LeafReport, PlanReport, explain
 from repro.api.plan import HyperPlan
 from repro.api.session import Resolution, Supernode
@@ -23,5 +23,5 @@ __all__ = [
     "HyperPlan", "Supernode", "Resolution", "plans", "explain",
     "PlanReport", "LeafReport",
     "PlanError", "UnknownAxisError", "IndivisibleError", "HostMemoryError",
-    "ServePlanError", "FabricPlanError", "TopologyError",
+    "ServePlanError", "FabricPlanError", "PipelinePlanError", "TopologyError",
 ]

@@ -12,6 +12,7 @@ Hierarchy::
       +-- HostMemoryError         host offload on a backend without a host tier
       +-- ServePlanError          plan is invalid for the serving runtime
       +-- FabricPlanError         multi-tenant fabric leg cannot be realised
+      +-- PipelinePlanError       pipeline-parallel leg cannot be realised
       +-- TopologyError           session topology cannot be realised
 """
 from __future__ import annotations
@@ -39,6 +40,11 @@ class ServePlanError(PlanError):
 
 class FabricPlanError(PlanError):
     """The multi-tenant fabric leg is malformed (replicas/split/tenants)."""
+
+
+class PipelinePlanError(PlanError):
+    """The pipeline-parallel leg is malformed (stage counts / layer split /
+    micro-batching), e.g. a stage-overclaim: more stages than macro-layers."""
 
 
 class TopologyError(PlanError):

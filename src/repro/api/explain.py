@@ -86,6 +86,13 @@ class PlanReport:
         return self.select("mem")
 
     @property
+    def pipeline(self):
+        """Pipeline stage-assignment rows (``pipeline=`` leg): one per
+        macro-layer with its ``stage k of S`` placement and the split rule
+        that fired, plus the pinned embed / head rows."""
+        return self.select("pipeline")
+
+    @property
     def fallbacks(self) -> Tuple[LeafReport, ...]:
         return tuple(l for l in self.leaves if l.fell_back)
 
@@ -93,6 +100,7 @@ class PlanReport:
         return {"param": len(self.params), "opt": len(self.opt),
                 "cache": len(self.caches), "state": len(self.serve_state),
                 "kernel": len(self.kernels), "mem": len(self.mem),
+                "pipeline": len(self.pipeline),
                 "fallbacks": len(self.fallbacks)}
 
     def raise_on_fallback(self) -> "PlanReport":
@@ -123,6 +131,7 @@ class PlanReport:
                     f"{c['state']} serving-state leaves, "
                     f"{c['kernel']} kernel rows, "
                     f"{c['mem']} mem-residency rows, "
+                    f"{c['pipeline']} pipeline rows, "
                     f"{c['fallbacks']} divisibility fallbacks")
         return "\n".join(rows)
 
@@ -247,6 +256,9 @@ def explain(plan: HyperPlan, cfg, layout: Optional[Layout] = None, *,
     if plan.fabric is not None:
         leaves.extend(_fabric_rows(plan, layout))
 
+    if plan.pipeline is not None:
+        leaves.extend(_pipeline_rows(plan, cfg))
+
     return PlanReport(plan, getattr(cfg, "name", str(cfg)), layout,
                       tuple(leaves))
 
@@ -283,6 +295,42 @@ def _mem_rows(plan: HyperPlan, cfg):
                      f"(depth={rplan.prefetch_depth})")
         rows.append(LeafReport("mem", ml.path, ml.shape, slot, ml.tier,
                                ml.rule, ()))
+    return rows
+
+
+def _pipeline_rows(plan: HyperPlan, cfg):
+    """One row per macro-layer with its pipeline stage assignment
+    (``stage k of S`` in the spec column, ``rule=even|explicit`` in the
+    rule column), plus the pinned endpoints: embeddings on the first
+    stage, final-norm/unembed on the last.  Model-dependent validation
+    (stage-overclaim vs the macro-layer count) fires HERE via
+    :func:`repro.core.pipeline.partition_stages` — the same typed
+    ``PipelinePlanError`` the trainer would raise, before any carve."""
+    from repro.core.mpmd import pipeline_bubble_steps
+    from repro.core.pipeline import partition_stages, schedule_1f1b
+
+    pcfg = plan.pipeline_config()
+    asns = partition_stages(cfg, pcfg.stages, pcfg.stage_layers)
+    S, M = pcfg.stages, pcfg.micro_batches
+    rows = [LeafReport(
+        "pipeline", "schedule/1f1b", (S, M),
+        f"span={schedule_1f1b(S, M).span} ticks",
+        "mpmd", f"bubble_steps={pipeline_bubble_steps(S, M)} "
+                f"(sync 1F1B, {M} micro-batches)", ())]
+    for asn in asns:
+        for li in asn.layers:
+            rows.append(LeafReport(
+                "pipeline", f"layer[{li:02d}]", (),
+                f"stage {asn.index} of {asn.num_stages}",
+                f"stage{asn.index}", f"rule={asn.rule}", ()))
+    rows.append(LeafReport(
+        "pipeline", "embed", (), "stage 0 of " + str(S), "stage0",
+        "pinned: embeddings on first stage", ()))
+    head = "unembed" if not cfg.tie_embeddings else "unembed(tied-copy)"
+    rows.append(LeafReport(
+        "pipeline", f"final_norm+{head}", (),
+        f"stage {S - 1} of {S}", f"stage{S - 1}",
+        "pinned: readout on last stage", ()))
     return rows
 
 

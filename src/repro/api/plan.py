@@ -32,7 +32,8 @@ import dataclasses
 from typing import Dict, Optional, Tuple, Union
 
 from repro.api.errors import (HostMemoryError, PlanError, UnknownAxisError)
-from repro.configs.base import FabricConfig, RLConfig, ServeConfig
+from repro.configs.base import (FabricConfig, PipelineConfig, RLConfig,
+                                ServeConfig)
 from repro.core.hypershard import ShardingPlan
 from repro.core.layout import Layout
 from repro.core.offload import OffloadConfig
@@ -86,6 +87,11 @@ class HyperPlan:
     # replica carve + SLO classes; the fabric owns the submesh split, so a
     # plan may set EITHER fabric or roles, never both
     fabric: Optional[FabricConfig] = None  # router + replica carve knobs
+    # -- pipeline-parallel training intent (HyperParallel-Mpipe) -----------
+    # contiguous layer stages on disjoint submeshes under synchronous 1F1B;
+    # the pipeline owns the stage->submesh carve, so a plan may set EITHER
+    # pipeline or fabric/roles, never both
+    pipeline: Optional[PipelineConfig] = None
     # -- MPMD role intent (paper Listing 1) --------------------------------
     # ((name, device_count), ...); count 0 = auto-balance the remainder
     roles: Tuple[Tuple[str, int], ...] = ()
@@ -202,6 +208,9 @@ class HyperPlan:
     def fabric_config(self) -> FabricConfig:
         return self.fabric if self.fabric is not None else FabricConfig()
 
+    def pipeline_config(self) -> PipelineConfig:
+        return self.pipeline if self.pipeline is not None else PipelineConfig()
+
     def roles_dict(self) -> Dict[str, int]:
         return dict(self.roles)
 
@@ -295,6 +304,22 @@ class HyperPlan:
                     "fabric owns the replica->submesh carve, so an explicit "
                     f"MPMD role split {self.roles} would double-claim the "
                     "devices; drop one of the two legs")
+        if self.pipeline is not None:
+            # typed PipelinePlanError for malformed stage/micro-batch knobs
+            self.pipeline.validate()
+            if self.fabric is not None:
+                raise PlanError(
+                    "a plan may set EITHER pipeline or fabric, not both: "
+                    "each owns its own devices->submesh carve (stage groups "
+                    "vs replica groups), so the two legs would double-claim "
+                    "the devices; train under the pipeline plan and serve "
+                    "under a separate fabric plan")
+            if self.roles:
+                raise PlanError(
+                    "a plan may set EITHER pipeline or roles, not both: the "
+                    "pipeline leg carves one MPMD group per stage, so an "
+                    f"explicit role split {self.roles} would double-claim "
+                    "the devices; drop one of the two legs")
         seen = set()
         for rname, count in self.roles:
             if rname in seen:

@@ -15,7 +15,8 @@ from __future__ import annotations
 from typing import Callable, Dict
 
 from repro.api.plan import HyperPlan
-from repro.configs.base import FabricConfig, RLConfig, ServeConfig
+from repro.configs.base import (FabricConfig, PipelineConfig, RLConfig,
+                                ServeConfig)
 
 _REGISTRY: Dict[str, Callable[..., HyperPlan]] = {}
 
@@ -101,6 +102,33 @@ def fabric(replicas: int = 2, **over) -> HyperPlan:
     return HyperPlan(fsdp=None, serve=ServeConfig(),
                      fabric=FabricConfig(replicas=replicas),
                      name="fabric").replace(**over)
+
+
+@register
+def pipeline(stages: int = 2, micro_batches: int = 4, **over) -> HyperPlan:
+    """Pipeline-parallel training (HyperParallel-Mpipe): ``stages``
+    contiguous layer stages on disjoint submeshes under the synchronous
+    1F1B schedule, tensor parallel over each stage submesh's ``model``
+    axis, no fsdp (the small-stage default).  Stage/micro knobs ride on
+    ``pipeline=``; ``plans.pipeline(stages=4, micro_batches=8)``."""
+    return HyperPlan(fsdp=None,
+                     pipeline=PipelineConfig(stages=stages,
+                                             micro_batches=micro_batches),
+                     name="pipeline").replace(**over)
+
+
+@register
+def pipeline_fsdp(stages: int = 2, micro_batches: int = 4,
+                  **over) -> HyperPlan:
+    """Pipeline stages with ZeRO-3-style fsdp x tp INSIDE each stage's
+    submesh: params shard over the stage's ``data`` axis and tensor-
+    parallel over its ``model`` axis — the paper's algebraic composition
+    of pipeline with the intra-stage strategies.  Set
+    ``pipeline=PipelineConfig(stage_mesh=(d, m))`` to pin the per-stage
+    (data, model) factoring."""
+    return HyperPlan(pipeline=PipelineConfig(stages=stages,
+                                             micro_batches=micro_batches),
+                     name="pipeline_fsdp").replace(**over)
 
 
 @register

@@ -183,6 +183,18 @@ class Supernode:
         """End-to-end training under the resolved plan; (params, history)."""
         from repro.train import trainer
         hp = HyperPlan.coerce(plan)
+        if hp.pipeline is not None:
+            # Mpipe leg: stage groups carved from the session's devices,
+            # 1F1B over core/mpmd — not a single SPMD program.
+            from repro.train import pipeline_trainer
+            if train_cfg is None:
+                train_cfg = trainer.TrainConfig(num_steps=steps or 100)
+            elif steps is not None:
+                train_cfg = dataclasses.replace(train_cfg, num_steps=steps)
+            return pipeline_trainer.train_pipeline(
+                cfg, shape, devices=self.devices, plan=hp, adamw=adamw,
+                train_cfg=train_cfg, moe_dispatch=moe_dispatch, hook=hook,
+                obs=self.obs())
         if hp.roles:
             raise PlanError(
                 f"plan declares mpmd roles {hp.roles_dict()} but "

@@ -179,3 +179,25 @@ def pipeline_bubble_fraction(module_times: Sequence[float], n_micro: int) -> flo
     total = mpmd_step_time(module_times, n_micro) * n_micro
     useful = sum(module_times) * n_micro / len(module_times)
     return max(0.0, 1.0 - useful / total)
+
+
+def pipeline_bubble_steps(n_stages: int, n_micro: int) -> int:
+    """Closed-form idle-slot count of the synchronous 1F1B schedule.
+
+    With uniform per-stage tick times the timeline spans
+    ``2 * (n_micro + n_stages - 1)`` ticks, each stage does ``2 * n_micro``
+    ticks of work, so the idle (stage, tick) slots are::
+
+        n_stages * 2*(n_micro + n_stages - 1) - n_stages * 2*n_micro
+          = 2 * n_stages * (n_stages - 1)
+
+    Exactly consistent with :func:`pipeline_bubble_fraction`::
+
+        bubble_steps / (n_stages * span) == (S - 1) / (M + S - 1)
+          == pipeline_bubble_fraction([t] * S, M)     (any uniform t)
+
+    The dependency-exact simulation in :func:`repro.core.pipeline.
+    schedule_1f1b` must reproduce this number EXACTLY — the pipeline
+    bench gate and ``train.pipeline.bubble_steps`` counter both pin it.
+    """
+    return 2 * n_stages * (n_stages - 1)

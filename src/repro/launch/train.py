@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --shape train_4k [--reduced] [--steps 100] [--offload] \
-        [--plan fsdp_tp|tp_only|offload_all] [--explain] \
+        [--plan fsdp_tp|tp_only|offload_all|pipeline|pipeline_fsdp] \
+        [--pipeline STAGES --micro-batches M] [--explain] \
         [--moe-dispatch gshard|ragged] [--mesh auto|none]
 
 On this CPU container use ``--reduced`` (the full configs are exercised by
@@ -28,10 +29,16 @@ def main():
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--plan", default="fsdp_tp",
-                    choices=["fsdp_tp", "tp_only", "offload_all"],
+                    choices=["fsdp_tp", "tp_only", "offload_all",
+                             "pipeline", "pipeline_fsdp"],
                     help="HyperPlan training preset to resolve")
     ap.add_argument("--offload", action="store_true",
                     help="HyperOffload: params+opt state on host")
+    ap.add_argument("--pipeline", type=int, default=0, metavar="STAGES",
+                    help="Mpipe: pipeline-parallel 1F1B over STAGES stage "
+                         "groups (adds a pipeline leg to the chosen plan)")
+    ap.add_argument("--micro-batches", type=int, default=4,
+                    help="micro-batches per step for --pipeline")
     ap.add_argument("--explain", action="store_true",
                     help="print the plan resolution report and exit")
     ap.add_argument("--moe-dispatch", default="gshard",
@@ -51,6 +58,10 @@ def main():
     # ONE declaration: --offload sets the plan, and the trainer derives the
     # fetch/offload schedule from it (no parallel OffloadConfig to drift)
     plan = plans.get(args.plan)()
+    if args.pipeline:
+        from repro.configs.base import PipelineConfig
+        plan = plan.replace(pipeline=PipelineConfig(
+            stages=args.pipeline, micro_batches=args.micro_batches))
     if args.offload:
         plan = plan.replace(params_on_host=True, opt_state_on_host=True)
 

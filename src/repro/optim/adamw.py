@@ -54,8 +54,21 @@ def global_norm(tree) -> jax.Array:
 
 def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig):
     """Returns (new_params, new_state, metrics)."""
+    return adamw_update_with_norm(grads, state, params, cfg,
+                                  global_norm(grads))
+
+
+def adamw_update_with_norm(grads, state: AdamWState, params,
+                           cfg: AdamWConfig, gnorm):
+    """AdamW step with a caller-supplied global grad norm.
+
+    The pipeline trainer clips against the norm over ALL stages' grads
+    (each stage holds only its own subtree, so the norm is reduced across
+    stage groups before any update runs) — passing it in keeps the clip
+    identical to the single-program :func:`adamw_update` path, which is
+    what the 1F1B parity contract requires.
+    """
     count = state.count + 1
-    gnorm = global_norm(grads)
     clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
     lr = schedule(cfg, count)
 

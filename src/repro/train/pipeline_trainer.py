@@ -1,0 +1,568 @@
+"""1F1B pipeline-parallel training over MPMD stage groups (Mpipe leg).
+
+The third MPMD tenant: a :class:`~repro.api.plan.HyperPlan` with a
+``pipeline=`` leg lowers onto one :class:`~repro.core.mpmd.ProcessGroup`
+per stage (carved from the session's devices, fsdp x tp INSIDE each
+stage's submesh via the ordinary HyperShard rule table — stage param
+subtrees keep their full paths, so the same rules fire) and a
+single-controller runner that dispatches the dependency-exact
+:func:`~repro.core.pipeline.schedule_1f1b` order.  JAX dispatch is async,
+so ops placed on disjoint stage submeshes overlap on hardware exactly as
+the schedule's tick table predicts; activations and gradient cotangents
+hop between stages via :func:`~repro.core.mpmd.transfer`.
+
+Parity contract (the headline invariant, CI-gated): on the SAME global
+batch, pipelined training equals the non-pipelined trainer within dtype
+tolerance.  The decomposition that makes this exact rather than
+approximate:
+
+  - the whole-batch mean CE is ``sum_m nll_sum_m / N_total`` with
+    ``N_total`` the global mask count (known upfront), so each
+    micro-batch's backward objective is ``nll_sum_m * (1/N_total)`` —
+    per-micro means would weight micro-batches wrongly;
+  - gradients accumulate in float32 across micro-batches;
+  - grad clipping uses the GLOBAL norm over all stages' grads (reduced
+    across stage groups, then fed to
+    :func:`~repro.optim.adamw.adamw_update_with_norm`);
+  - tied embeddings: the last stage carries a replicated readout COPY of
+    ``embed``; its gradient transfers back to stage 0 and sums into the
+    lookup gradient before the update, and the copy re-syncs from stage 0
+    after every optimizer step (it is excluded from the last stage's own
+    optimizer tree).
+
+MoE aux losses are batch-composition-dependent (router load terms), so
+the exact-parity contract applies to dense stacks; MoE trains fine but
+its aux term is the per-micro average (documented approximation).
+
+When the session has fewer devices than stages the carve degrades to the
+COLOCATED fallback (every stage group shares all devices — the fabric
+carve's precedent): schedule, bubble accounting and parity are unchanged,
+only the hardware overlap disappears.  That is the 1-device CI path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import hypershard, mpmd, offload as off
+from repro.core.meshctx import constrain, use_mesh
+from repro.core.pipeline import (PipelineSchedule, StageAssignment,
+                                 partition_stages, schedule_1f1b,
+                                 sequential_dispatch, stage_param_tree)
+from repro.data.pipeline import DataConfig, make_loader
+from repro.models import model as M
+from repro.models.common import rms_norm
+from repro.models.mixers import segments
+from repro.optim import adamw as opt_mod
+from repro.train import steps as steps_mod
+from repro.train.trainer import TrainConfig
+
+
+def _err(msg: str):
+    from repro.api.errors import PipelinePlanError
+    return PipelinePlanError(msg)
+
+
+def _aux_of(metrics, cfg):
+    if cfg.moe is None:
+        return jnp.float32(0)
+    return (cfg.moe.router_aux_coef * metrics["moe_aux_loss"]
+            + cfg.moe.router_z_coef * metrics["moe_z_loss"])
+
+
+def _stage_apply(params, inp, positions, cfg, asn: StageAssignment, *,
+                 moe_dispatch):
+    """Input -> output activations through one stage's layer slice.
+
+    First stage embeds tokens; every stage runs its contiguous macro-layer
+    slice with the SAME remat + scan + constrain structure as the full
+    model forward, so the numerics class matches the plain trainer.
+    """
+    if asn.first:
+        x = jnp.take(params["embed"], inp, axis=0)
+        x = constrain(x, ("pod", "data"), None, None)
+    else:
+        x = inp
+    metrics = M._zero_metrics()
+    segs = segments(cfg)
+    for sl in asn.slices:
+        seg = segs[sl.seg]
+
+        def body(carry, layer_params, _seg=seg):
+            h, acc = carry
+            h = constrain(h, ("pod", "data"), "model", None)
+            for sub_p, kd in zip(layer_params, _seg.kinds):
+                h, _, mm = M._sublayer_forward(
+                    sub_p, h, positions, cfg, kd, mode="train",
+                    window_override=None, moe_dispatch=moe_dispatch)
+                acc = jax.tree.map(lambda a, b: a + b, acc, mm)
+            return (h, acc), None
+
+        (x, metrics), _ = jax.lax.scan(jax.checkpoint(body), (x, metrics),
+                                       params[f"seg{sl.seg}"])
+    return x, metrics
+
+
+def _stage_head(params, x, targets, mask, cfg, inv_total):
+    """Last-stage readout: final norm + unembed + NLL-sum * (1/N_total)."""
+    x = constrain(x, ("pod", "data"), "model", None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = x @ unembed.T
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    nll_sum, _ = steps_mod.cross_entropy_parts(logits, targets, mask,
+                                               cfg.vocab_size)
+    return nll_sum * inv_total
+
+
+class PipelineTrainer:
+    """Per-stage jit'd 1F1B runner bound to one (cfg, plan, devices)."""
+
+    def __init__(self, cfg, plan, *, devices=None, adamw=None, seed: int = 0,
+                 moe_dispatch: str = "gshard", obs=None):
+        from repro.api.plan import HyperPlan
+        from repro.obs import Observability
+
+        self.cfg = cfg
+        self.obs = obs if obs is not None else Observability()
+        hp = HyperPlan.coerce(plan)
+        if hp.pipeline is None:
+            from repro.configs.base import PipelineConfig
+            hp = hp.replace(pipeline=PipelineConfig())
+        hp.validate()
+        self.plan = hp
+        self.pcfg = hp.pipeline_config()
+        self.adamw_cfg = adamw or opt_mod.AdamWConfig()
+        self.moe_dispatch = moe_dispatch
+        self.tied = bool(cfg.tie_embeddings)
+        if cfg.frontend_dim:
+            raise _err(
+                f"{cfg.name}: the pipeline trainer is text-only for now "
+                "(multimodal prefix_embeds need a frontend stage — ROADMAP "
+                "follow-up); drop the pipeline leg or the frontend")
+
+        S, Mi = self.pcfg.stages, self.pcfg.micro_batches
+        self.n_stages, self.n_micro = S, Mi
+        self.asns = partition_stages(cfg, S, self.pcfg.stage_layers)
+        self.sched: PipelineSchedule = schedule_1f1b(S, Mi)
+        self.seq_ops = sequential_dispatch(S, Mi)
+
+        devices = list(devices if devices is not None else jax.devices())
+        self.colocated = len(devices) < S
+        if self.colocated:
+            # every stage shares all devices (fabric's colocated precedent)
+            shape = (1, len(devices))
+            base = mpmd.groups_from_mapping(
+                {"stage": len(devices)}, devices=devices,
+                shapes={"stage": shape})["stage"]
+            self.groups = [mpmd.ProcessGroup(f"stage{s}", base.mesh)
+                           for s in range(S)]
+        else:
+            per = len(devices) // S
+            shape = tuple(self.pcfg.stage_mesh) or (1, per)
+            if int(np.prod(shape)) != per:
+                raise _err(
+                    f"pipeline.stage_mesh={shape} needs "
+                    f"{int(np.prod(shape))} devices per stage but the "
+                    f"carve gives {per} ({len(devices)} devices / {S} "
+                    "stages); fix stage_mesh or the topology")
+            gmap = mpmd.groups_from_mapping(
+                {f"stage{s}": per for s in range(S)},
+                devices=devices[:per * S],
+                shapes={f"stage{s}": shape for s in range(S)})
+            self.groups = [gmap[f"stage{s}"] for s in range(S)]
+
+        splan = hp.sharding_plan()
+        self.ocfg = hp.offload_config()
+        key = jax.random.PRNGKey(seed)
+        full_shapes = jax.eval_shape(lambda: M.init_model(cfg, key))
+        full_params = M.init_model(cfg, key)
+
+        self.params: list = []
+        self.opt: list = []
+        self.shardings: list = []     # per-stage {"params": tree of NamedSharding}
+        self._fwd: list = []
+        self._bwd: list = []
+        self._fb_last: Optional[Callable] = None
+        self._acc: list = []
+        self._sqnorm: list = []
+        self._update: list = []
+        self._add = jax.jit(lambda a, b: a + b)
+
+        for s, asn in enumerate(self.asns):
+            mesh = self.groups[s].mesh
+            sub_shapes = jax.eval_shape(
+                lambda p, _a=asn: stage_param_tree(p, cfg, _a), full_shapes)
+            psh = hypershard.make_param_shardings(mesh, sub_shapes, splan)
+            self.shardings.append({"params": psh})
+            sub = stage_param_tree(full_params, cfg, asn)
+            sub = jax.device_put(sub, psh)
+            self.params.append(sub)
+            own_psh = self._own(psh, s)
+            zeros = lambda t, _sh=own_psh: jax.device_put(
+                jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t),
+                _sh)
+            own_sub = self._own(sub, s)
+            self.opt.append(opt_mod.AdamWState(
+                mu=zeros(own_sub), nu=zeros(own_sub),
+                count=jax.device_put(jnp.zeros((), jnp.int32),
+                                     NamedSharding(mesh, P()))))
+            self._build_stage_fns(s, asn)
+        del full_params
+
+        if self.ocfg.params_on_host or self.ocfg.opt_state_on_host:
+            self._offload_all()
+
+        self.obs.record_compile(
+            "pipeline_step", (S, Mi, cfg.name, moe_dispatch))
+
+    # ------------------------------------------------------------------
+    def _own(self, tree: Dict, s: int) -> Dict:
+        """A stage's OWNED subtree: the tied readout copy on the last
+        stage belongs to stage 0's optimizer, not the last stage's."""
+        if self.tied and self.n_stages > 1 and s == self.n_stages - 1:
+            return {k: v for k, v in tree.items() if k != "embed"}
+        return tree
+
+    def _build_stage_fns(self, s: int, asn: StageAssignment):
+        cfg, S = self.cfg, self.n_stages
+        mesh = self.groups[s].mesh
+        inv_m = 1.0 / self.n_micro
+        moe_dispatch = self.moe_dispatch
+
+        def positions_of(inp):
+            return jnp.arange(inp.shape[1])
+
+        if asn.last:
+            def f_last(p, xin, targets, mask, inv_total):
+                y, metrics = _stage_apply(p, xin, positions_of(xin), cfg,
+                                          asn, moe_dispatch=moe_dispatch)
+                ce_part = _stage_head(p, y, targets, mask, cfg, inv_total)
+                aux = _aux_of(metrics, cfg)
+                return ce_part + aux * inv_m, (ce_part, aux, metrics)
+
+            if asn.first:          # S == 1: grad accumulation, no pipeline
+                def fb(p, tokens, targets, mask, inv_total):
+                    with use_mesh(mesh):
+                        (loss_m, parts), gp = jax.value_and_grad(
+                            lambda q: f_last(q, tokens, targets, mask,
+                                             inv_total),
+                            has_aux=True)(p)
+                    return loss_m, parts, gp, None
+            else:
+                def fb(p, xin, targets, mask, inv_total):
+                    with use_mesh(mesh):
+                        (loss_m, parts), (gp, gx) = jax.value_and_grad(
+                            f_last, argnums=(0, 1), has_aux=True)(
+                                p, xin, targets, mask, inv_total)
+                    return loss_m, parts, gp, gx
+            self._fb_last = jax.jit(fb)
+            self._fwd.append(None)
+            self._bwd.append(None)
+        else:
+            def fwd(p, xin):
+                with use_mesh(mesh):
+                    y, _ = _stage_apply(p, xin, positions_of(xin), cfg, asn,
+                                        moe_dispatch=moe_dispatch)
+                return y
+            self._fwd.append(jax.jit(fwd))
+
+            def f_mid(p, xin):
+                y, metrics = _stage_apply(p, xin, positions_of(xin), cfg,
+                                          asn, moe_dispatch=moe_dispatch)
+                return (y, _aux_of(metrics, cfg)), metrics
+
+            if asn.first:
+                def bwd(p, tokens, dy):
+                    with use_mesh(mesh):
+                        out, vjp_fn, metrics = jax.vjp(
+                            lambda q: f_mid(q, tokens), p, has_aux=True)
+                        (gp,) = vjp_fn((dy, jnp.float32(inv_m)))
+                    return gp, None, out[1], metrics
+            else:
+                def bwd(p, xin, dy):
+                    with use_mesh(mesh):
+                        out, vjp_fn, metrics = jax.vjp(f_mid, p, xin,
+                                                       has_aux=True)
+                        gp, gx = vjp_fn((dy, jnp.float32(inv_m)))
+                    return gp, gx, out[1], metrics
+            self._bwd.append(jax.jit(bwd))
+
+        self._acc.append(jax.jit(
+            lambda acc, g: jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), acc, g)))
+        self._sqnorm.append(jax.jit(
+            lambda g: sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                          for x in jax.tree.leaves(g))))
+        acfg = self.adamw_cfg
+        self._update.append(jax.jit(
+            lambda p, o, g, gn, _c=acfg:
+                opt_mod.adamw_update_with_norm(g, o, p, _c, gn)))
+
+    # ------------------------------------------------------------------
+    # HyperOffload composition: host <-> device legs around each step
+    def _fetch_all(self):
+        for s in range(self.n_stages):
+            psh = self.shardings[s]["params"]
+            if self.ocfg.params_on_host:
+                self.params[s] = jax.device_put(self.params[s], psh)
+            if self.ocfg.opt_state_on_host:
+                own = self._own(psh, s)
+                o = self.opt[s]
+                self.opt[s] = opt_mod.AdamWState(
+                    mu=jax.device_put(o.mu, own),
+                    nu=jax.device_put(o.nu, own), count=o.count)
+
+    def _offload_all(self):
+        for s in range(self.n_stages):
+            psh = self.shardings[s]["params"]
+            if self.ocfg.params_on_host:
+                self.params[s] = jax.device_put(self.params[s],
+                                                off.host_shardings(psh))
+            if self.ocfg.opt_state_on_host:
+                own = off.host_shardings(self._own(psh, s))
+                o = self.opt[s]
+                self.opt[s] = opt_mod.AdamWState(
+                    mu=jax.device_put(o.mu, own),
+                    nu=jax.device_put(o.nu, own), count=o.count)
+
+    # ------------------------------------------------------------------
+    def step(self, batch: Dict, *, dispatch: str = "1f1b") -> Dict:
+        """One optimizer step over ``batch`` under the 1F1B schedule.
+
+        ``dispatch="sequential"`` runs the same work in the no-overlap
+        per-micro order (each op blocked on completion) — the benchmark's
+        baseline; results are identical, only the overlap differs.
+        """
+        cfg, S, Mi = self.cfg, self.n_stages, self.n_micro
+        B = int(batch["inputs"].shape[0])
+        if B % Mi:
+            raise _err(
+                f"global_batch={B} does not divide into "
+                f"pipeline.micro_batches={Mi}; pick a micro count that "
+                "divides the batch")
+        b = B // Mi
+        dsize = self.groups[0].mesh.shape["data"]
+        if b % dsize:
+            raise _err(
+                f"micro-batch size {b} (global_batch={B} / "
+                f"micro_batches={Mi}) does not divide the stage data axis "
+                f"({dsize}); fix micro_batches or stage_mesh")
+
+        needs_offload = (self.ocfg.params_on_host
+                         or self.ocfg.opt_state_on_host)
+        if needs_offload:
+            self._fetch_all()
+
+        mesh0 = self.groups[0].mesh
+        mesh_last = self.groups[-1].mesh
+        tok_sh = NamedSharding(mesh0, P("data", None))
+        tgt_sh = NamedSharding(mesh_last, P("data", None))
+        total_mask = float(jnp.sum(batch["mask"]))
+        inv_total = jax.device_put(
+            jnp.float32(1.0 / max(total_mask, 1.0)),
+            NamedSharding(mesh_last, P()))
+
+        toks, tgts, msks = [], [], []
+        for m in range(Mi):
+            sl = slice(m * b, (m + 1) * b)
+            toks.append(jax.device_put(batch["inputs"][sl], tok_sh))
+            tgts.append(jax.device_put(batch["targets"][sl], tgt_sh))
+            msks.append(jax.device_put(batch["mask"][sl], tgt_sh))
+
+        act_spec = ("data", None, None)
+        ops = (self.sched.ops if dispatch == "1f1b" else self.seq_ops)
+        x_in: Dict = {(0, m): toks[m] for m in range(Mi)}
+        dy_in: Dict = {}
+        last_fb: Dict = {}
+        acc = [None] * S
+        loss_parts, aux_extra, mm_list = [], [], []
+        handoffs = 0
+        dispatch_log = []
+        t0 = time.perf_counter()
+        first_t = [None] * S
+        last_t = [t0] * S
+
+        for op in ops:
+            s, m = op.stage, op.micro
+            now = time.perf_counter()
+            if first_t[s] is None:
+                first_t[s] = now
+            dispatch_log.append(op.label())
+            if op.kind == "F":
+                if s == S - 1:
+                    out = self._fb_last(self.params[s], x_in[(s, m)],
+                                        tgts[m], msks[m], inv_total)
+                    loss_m, (ce_m, aux_m, mm), gp, gx = out
+                    loss_parts.append((loss_m, ce_m))
+                    mm_list.append(mm)
+                    last_fb[m] = (gp, gx)
+                    produced = loss_m
+                else:
+                    y = self._fwd[s](self.params[s], x_in[(s, m)])
+                    x_in[(s + 1, m)] = mpmd.transfer(
+                        y, self.groups[s + 1], *act_spec)
+                    handoffs += 1
+                    produced = x_in[(s + 1, m)]
+            else:                                   # "B"
+                if s == S - 1:
+                    gp, gx = last_fb.pop(m)
+                else:
+                    gp, gx, aux_m, mm = self._bwd[s](
+                        self.params[s], x_in[(s, m)], dy_in.pop((s, m)))
+                    aux_extra.append(aux_m)
+                    mm_list.append(mm)
+                if s > 0:
+                    dy_in[(s - 1, m)] = mpmd.transfer(
+                        gx, self.groups[s - 1], *act_spec)
+                    handoffs += 1
+                acc[s] = (self._acc[s](acc[s], gp) if acc[s] is not None
+                          else jax.tree.map(
+                              lambda g: g.astype(jnp.float32), gp))
+                produced = acc[s]
+                x_in.pop((s, m), None)
+            if dispatch == "sequential":
+                # true no-overlap baseline: drain before the next dispatch
+                jax.tree.map(jax.block_until_ready, produced)
+            last_t[s] = time.perf_counter()
+        t_end = time.perf_counter()
+
+        # tied embeddings: merge the readout copy's grad into stage 0's
+        tied_sync = self.tied and S > 1
+        if tied_sync:
+            g_embed = acc[S - 1].pop("embed")
+            g0 = mpmd.transfer(g_embed, self.groups[0],
+                               *self._embed_spec())
+            acc[0]["embed"] = self._add(acc[0]["embed"], g0)
+
+        # global grad norm across every stage's owned grads
+        sumsqs = [self._sqnorm[s](acc[s]) for s in range(S)]
+        gnorm = float(np.sqrt(sum(float(x) for x in sumsqs)))
+        lr = None
+        for s in range(S):
+            own_p = self._own(self.params[s], s)
+            new_p, new_o, om = self._update[s](
+                own_p, self.opt[s], acc[s], jnp.float32(gnorm))
+            lr = om["lr"] if lr is None else lr
+            if self.tied and S > 1 and s == S - 1:
+                new_p = dict(new_p)
+                new_p["embed"] = self.params[s]["embed"]
+            self.params[s] = new_p
+            self.opt[s] = new_o
+        if tied_sync:
+            self.params[S - 1]["embed"] = jax.device_put(
+                self.params[0]["embed"],
+                self.shardings[S - 1]["params"]["embed"])
+            self.obs.metrics.counter(
+                "train.pipeline.tied_embed_syncs").inc()
+
+        if needs_offload:
+            self._offload_all()
+
+        # obs: exact schedule counters + per-stage fill/drain spans
+        sched = self.sched if dispatch == "1f1b" else None
+        if sched is not None:
+            self.obs.metrics.counter(
+                "train.pipeline.bubble_steps").inc(sched.bubble_steps)
+        self.obs.metrics.counter("train.pipeline.handoffs").inc(handoffs)
+        self.obs.metrics.counter("train.pipeline.microbatches").inc(Mi)
+        for s in range(S):
+            fill_ticks, _, drain_ticks = (
+                self.sched.stage_phases(s) if sched is not None
+                else (0, 0, 0))
+            if first_t[s] is not None and first_t[s] > t0:
+                self.obs.trace.complete(
+                    "pipeline.fill", int(t0 * 1e9), int(first_t[s] * 1e9),
+                    track=f"pipeline:stage{s}", stage=s, ticks=fill_ticks)
+            if last_t[s] < t_end:
+                self.obs.trace.complete(
+                    "pipeline.drain", int(last_t[s] * 1e9),
+                    int(t_end * 1e9), track=f"pipeline:stage{s}", stage=s,
+                    ticks=drain_ticks)
+
+        ce = sum(float(c) for _, c in loss_parts)
+        aux = (sum(float(l) for l, _ in loss_parts) - ce
+               + sum(float(a) / Mi for a in aux_extra))
+        loss = ce + aux
+        mm_acc = {k: sum(float(mm[k]) for mm in mm_list) / Mi
+                  for k in ("moe_aux_loss", "moe_z_loss")}
+        return {"loss": loss, "ce": ce, "aux": aux, **mm_acc,
+                "grad_norm": gnorm, "lr": float(lr),
+                "handoffs": handoffs, "dispatch": tuple(dispatch_log)}
+
+    def _embed_spec(self) -> Tuple:
+        spec = self.shardings[0]["params"]["embed"].spec
+        return tuple(spec)
+
+    # ------------------------------------------------------------------
+    def merged_params(self) -> Dict:
+        """Reassemble the full (unsharded, host-side) param tree — segment
+        slices concatenated back in stage order; the tied readout copy is
+        dropped.  Small-model tooling (parity tests, checkpoint export)."""
+        out: Dict = {}
+        seg_parts: Dict = {}
+        for s, asn in enumerate(self.asns):
+            host = jax.device_get(self.params[s])
+            for k, v in host.items():
+                if k.startswith("seg"):
+                    seg_parts.setdefault(k, []).append((asn.layers[0], v))
+                elif not (self.tied and self.n_stages > 1
+                          and s == self.n_stages - 1 and k == "embed"):
+                    out[k] = jax.tree.map(jnp.asarray, v)
+        for k, parts in seg_parts.items():
+            parts.sort(key=lambda t: t[0])
+            out[k] = jax.tree.map(
+                lambda *xs: jnp.concatenate([jnp.asarray(x) for x in xs],
+                                            axis=0),
+                *[p for _, p in parts])
+        return out
+
+
+def train_pipeline(cfg, shape, *, devices=None, plan=None, adamw=None,
+                   train_cfg: TrainConfig = TrainConfig(),
+                   moe_dispatch: str = "gshard",
+                   hook: Optional[Callable] = None, obs=None):
+    """End-to-end pipelined training; returns (merged params, history).
+
+    Mirrors :func:`repro.train.trainer.train`'s loop contract (history
+    cadence, metric keys, hook) so `session.train` can dispatch on the
+    plan's ``pipeline`` leg transparently.  Checkpointing is not wired
+    for the pipeline path yet (ROADMAP follow-up).
+    """
+    from repro.obs import Observability
+    obs = obs if obs is not None else Observability()
+    adamw = adamw or opt_mod.AdamWConfig(total_steps=train_cfg.num_steps)
+    trainer = PipelineTrainer(cfg, plan, devices=devices, adamw=adamw,
+                              seed=train_cfg.seed,
+                              moe_dispatch=moe_dispatch, obs=obs)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                      global_batch=shape.global_batch, seed=train_cfg.seed)
+    loader = make_loader(dcfg, None)
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in zip(range(train_cfg.num_steps), loader):
+        t_step = time.perf_counter()
+        with obs.trace.span("train.step", track="train", step=i + 1):
+            metrics = trainer.step(batch)
+        obs.metrics.counter("train.steps").inc()
+        obs.metrics.histogram("train.step_s").observe(
+            time.perf_counter() - t_step)
+        if (i + 1) % train_cfg.log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()
+                 if not isinstance(v, tuple)}
+            m["step"] = i + 1
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            for k in ("loss", "grad_norm"):
+                obs.metrics.gauge(f"train.{k}").set(m[k])
+            if hook:
+                hook(m)
+    return trainer.merged_params(), history
+
+
+__all__ = ["PipelineTrainer", "train_pipeline"]

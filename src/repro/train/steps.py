@@ -19,8 +19,14 @@ from repro.models import model as M
 from repro.optim import adamw as opt_mod
 
 
-def cross_entropy(logits, targets, mask, vocab_size: int):
-    """Mean CE over masked tokens; logits may be vocab-padded."""
+def cross_entropy_parts(logits, targets, mask, vocab_size: int):
+    """(masked NLL sum, mask sum) — the unreduced halves of the mean CE.
+
+    Factored out so the pipeline trainer can normalise each micro-batch's
+    NLL sum by the GLOBAL batch's mask count (known upfront): summing
+    ``nll_sum_m / N_total`` over micro-batches reproduces the plain
+    trainer's whole-batch mean exactly, which per-micro means would not.
+    """
     V_pad = logits.shape[-1]
     lf = logits.astype(jnp.float32)
     if V_pad > vocab_size:
@@ -33,7 +39,13 @@ def cross_entropy(logits, targets, mask, vocab_size: int):
     oh = jax.nn.one_hot(targets, V_pad, dtype=lf.dtype)
     picked = jnp.einsum("bsv,bsv->bs", lf, oh)
     nll = (lse - picked) * mask
-    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.sum(), mask.sum()
+
+
+def cross_entropy(logits, targets, mask, vocab_size: int):
+    """Mean CE over masked tokens; logits may be vocab-padded."""
+    nll_sum, mask_sum = cross_entropy_parts(logits, targets, mask, vocab_size)
+    return nll_sum / jnp.maximum(mask_sum, 1.0)
 
 
 def loss_fn(params, batch, cfg, *, moe_dispatch="gshard", remat=True,

@@ -1,0 +1,234 @@
+"""Mpipe: stage partitioner, 1F1B schedule, and pipelined-training parity.
+
+The multi-device cases fork a subprocess with a forced 8-device host
+platform (see conftest) so the stage groups land on DISJOINT submeshes —
+the schedule/parity contract is the same one `benchmarks/pipeline_bench`
+gates in CI on the colocated 1-device carve.
+"""
+import dataclasses
+from fractions import Fraction
+
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+def _cfg():
+    from repro.configs.base import get_config
+    return dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                               dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# schedule + partitioner arithmetic (pure host-side, no devices)
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+def test_bubble_count_matches_analytic_model():
+    from repro.core.mpmd import pipeline_bubble_fraction, pipeline_bubble_steps
+    from repro.core.pipeline import schedule_1f1b
+
+    for s in (1, 2, 3, 4, 6):
+        for m in (1, 2, 4, 8):
+            sch = schedule_1f1b(s, m)
+            assert sch.span == 2 * (m + s - 1)
+            assert sch.bubble_steps == pipeline_bubble_steps(s, m)
+            # EXACT consistency with the analytic fraction: bubble slots
+            # over total slots is (S-1)/(M+S-1), as rationals
+            assert Fraction(sch.bubble_steps, s * sch.span) == Fraction(
+                s - 1, m + s - 1)
+            assert pipeline_bubble_fraction([1.0] * s, m) == pytest.approx(
+                (s - 1) / (m + s - 1))
+
+
+@pytest.mark.smoke
+def test_schedule_respects_dependencies():
+    from repro.core.pipeline import schedule_1f1b
+
+    for s, m in ((2, 4), (3, 5), (4, 8)):
+        sch = schedule_1f1b(s, m)
+        assert len(sch.ops) == 2 * s * m
+        f_tick, b_tick = {}, {}
+        for op in sch.ops:
+            (f_tick if op.kind == "F" else b_tick)[
+                (op.stage, op.micro)] = op.tick
+        for op in sch.ops:
+            if op.kind == "F" and op.stage > 0:
+                assert op.tick > f_tick[(op.stage - 1, op.micro)]
+            if op.kind == "B":
+                assert op.tick > f_tick[(op.stage, op.micro)]
+                if op.stage < s - 1:
+                    assert op.tick > b_tick[(op.stage + 1, op.micro)]
+
+
+@pytest.mark.smoke
+def test_partitioner_even_and_explicit():
+    from repro.api.errors import PipelinePlanError
+    from repro.core.pipeline import (even_stage_layers, num_macro_layers,
+                                     partition_stages)
+
+    cfg = _cfg()
+    assert num_macro_layers(cfg) == 2
+    assert even_stage_layers(7, 3) == (3, 2, 2)
+
+    even = partition_stages(cfg, 2)
+    assert [a.layers for a in even] == [(0,), (1,)]
+    assert all(a.rule == "even" for a in even)
+    explicit = partition_stages(cfg, 2, stage_layers=(1, 1))
+    assert [a.layers for a in explicit] == [a.layers for a in even]
+    assert all(a.rule == "explicit" for a in explicit)
+
+    with pytest.raises(PipelinePlanError, match="stage-overclaim"):
+        partition_stages(cfg, 99)
+    with pytest.raises(PipelinePlanError):
+        partition_stages(cfg, 2, stage_layers=(2, 1))  # sum overclaim
+    with pytest.raises(PipelinePlanError):
+        partition_stages(cfg, 2, stage_layers=(2,))    # len mismatch
+
+
+@pytest.mark.smoke
+def test_explain_reports_stage_rows():
+    from repro.api import Supernode, plans
+
+    report = Supernode().explain(plans.pipeline(stages=2), _cfg())
+    rows = report.select("pipeline")
+    layer_rows = [r for r in rows if r.path.startswith("layer[")]
+    assert len(layer_rows) == 2
+    assert all("stage" in r.spec and "rule=" in r.rule for r in layer_rows)
+    assert any(r.path == "schedule/1f1b" for r in rows)
+    pinned = [r for r in rows if "pinned" in r.rule]
+    assert {r.path.split("+")[0] for r in pinned} == {"embed", "final_norm"}
+
+
+# ---------------------------------------------------------------------------
+# 1-device colocated fast path
+# ---------------------------------------------------------------------------
+@pytest.mark.smoke
+def test_colocated_smoke_counters():
+    from repro.api import plans
+    from repro.configs.base import ShapeConfig
+    from repro.core.mpmd import pipeline_bubble_steps
+    from repro.obs import Observability
+    from repro.train.pipeline_trainer import train_pipeline
+    from repro.train.trainer import TrainConfig
+
+    obs = Observability()
+    shape = ShapeConfig("t", 32, 4, "train")
+    params, hist = train_pipeline(
+        _cfg(), shape, plan=plans.pipeline(stages=2, micro_batches=2),
+        train_cfg=TrainConfig(num_steps=2, log_every=1), obs=obs)
+    assert len(hist) == 2 and hist[-1]["loss"] > 0
+    assert "embed" in params and "seg0" in params
+    c = obs.metrics._metrics
+    assert c["train.pipeline.bubble_steps"].value == \
+        2 * pipeline_bubble_steps(2, 2)
+    assert c["train.pipeline.handoffs"].value == 2 * 2 * 2 * (2 - 1)
+    assert c["train.pipeline.microbatches"].value == 2 * 2
+
+
+@pytest.mark.smoke
+def test_micro_batch_divisibility_rejected():
+    from repro.api import PipelinePlanError, plans
+    from repro.configs.base import ShapeConfig
+    from repro.train.pipeline_trainer import train_pipeline
+    from repro.train.trainer import TrainConfig
+
+    with pytest.raises(PipelinePlanError, match="micro_batches"):
+        train_pipeline(_cfg(), ShapeConfig("t", 32, 4, "train"),
+                       plan=plans.pipeline(stages=2, micro_batches=3),
+                       train_cfg=TrainConfig(num_steps=1))
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device mesh: disjoint stages, fsdp x tp inside each submesh
+# ---------------------------------------------------------------------------
+def test_1f1b_parity_8dev_2stage_fsdp_tp():
+    """Headline Mpipe contract: 2 stages x (2,2) fsdp x tp submeshes,
+    loss/grad-norm trajectory and final params match the non-pipelined
+    trainer on identical micro-batches."""
+    run_subprocess("""
+import dataclasses
+import numpy as np
+import jax
+assert len(jax.devices()) == 8
+from repro.api import plans
+from repro.configs.base import PipelineConfig, ShapeConfig, get_config
+from repro.train.trainer import TrainConfig, train
+from repro.train.pipeline_trainer import PipelineTrainer, train_pipeline
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                          dtype="float32")
+shape = ShapeConfig("t", 64, 8, "train")
+tcfg = TrainConfig(num_steps=3, log_every=1, seed=0)
+p_plain, h_plain = train(cfg, shape, mesh=None, plan=None, train_cfg=tcfg)
+
+plan = plans.pipeline_fsdp(stages=2, micro_batches=4).replace(
+    pipeline=PipelineConfig(stages=2, micro_batches=4, stage_mesh=(2, 2)))
+tr = PipelineTrainer(cfg, plan, seed=0)
+assert not tr.colocated
+ids = [set(d.id for d in g.mesh.devices.flat) for g in tr.groups]
+assert ids[0].isdisjoint(ids[1]) and all(len(i) == 4 for i in ids)
+
+p_pipe, h_pipe = train_pipeline(cfg, shape, plan=plan, train_cfg=tcfg)
+for a, b in zip(h_plain, h_pipe):
+    assert abs(a["loss"] - b["loss"]) < 5e-4, (a, b)
+    assert abs(a["grad_norm"] - b["grad_norm"]) < 5e-4, (a, b)
+for x, y in zip(jax.tree.leaves(p_plain), jax.tree.leaves(p_pipe)):
+    np.testing.assert_allclose(np.asarray(x, np.float32),
+                               np.asarray(y, np.float32),
+                               atol=5e-5, rtol=5e-4)
+print("parity ok")
+""", devices=8)
+
+
+def test_explicit_vs_even_split_equivalence_8dev():
+    """stage_layers=(1, 1) must train bit-comparably to the even default
+    (same split, different rule path)."""
+    run_subprocess("""
+import dataclasses
+import numpy as np
+import jax
+from repro.api import plans
+from repro.configs.base import PipelineConfig, ShapeConfig, get_config
+from repro.train.trainer import TrainConfig
+from repro.train.pipeline_trainer import train_pipeline
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                          dtype="float32")
+shape = ShapeConfig("t", 32, 4, "train")
+tcfg = TrainConfig(num_steps=2, log_every=1, seed=0)
+outs = []
+for layers in ((), (1, 1)):
+    plan = plans.pipeline(stages=2, micro_batches=2).replace(
+        pipeline=PipelineConfig(stages=2, micro_batches=2,
+                                stage_layers=layers))
+    outs.append(train_pipeline(cfg, shape, plan=plan, train_cfg=tcfg))
+(p_a, h_a), (p_b, h_b) = outs
+for a, b in zip(h_a, h_b):
+    assert a["loss"] == b["loss"], (a, b)
+for x, y in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("explicit==even ok")
+""", devices=8)
+
+
+def test_session_train_dispatches_pipeline_8dev():
+    """session.train routes a pipeline-leg plan to the 1F1B trainer and
+    the obs counters carry the analytic bubble count."""
+    run_subprocess("""
+import dataclasses
+from repro.api import Supernode, plans
+from repro.configs.base import ShapeConfig, get_config
+from repro.core.mpmd import pipeline_bubble_steps
+
+cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                          dtype="float32")
+session = Supernode.auto()
+params, hist = session.train(cfg, ShapeConfig("t", 32, 8, "train"),
+                             plan=plans.pipeline(stages=2, micro_batches=2),
+                             steps=2)
+assert len(hist) >= 1
+c = session.obs().metrics._metrics
+assert c["train.pipeline.bubble_steps"].value == \
+    2 * pipeline_bubble_steps(2, 2)
+print("session dispatch ok")
+""", devices=8)

@@ -57,6 +57,8 @@ GATES = (
      "continuous vs sequential rollout tok/s"),
     ("BENCH_fabric", ("ttft", "speedup_p95_wall"),
      "fabric vs shared-FCFS interactive p95 TTFT (wall)"),
+    ("BENCH_pipeline", ("wall", "speedup_1f1b_vs_sequential"),
+     "1F1B vs fully-blocked sequential dispatch step time"),
 )
 
 # DETERMINISTIC gates: fixed-seed host-side counters (scheduler decisions,
@@ -121,6 +123,23 @@ DET_GATES = (
      "graph residency planner: disk-tier leaves under forcing budgets"),
     ("BENCH_offload", ("residency", "schedule_steps"),
      "graph residency planner: prefetch schedule length"),
+    # Mpipe: the 1F1B schedule is pure arithmetic (no seeds, no clocks),
+    # so the bubble counter, the executed dispatch order (crc32 digest),
+    # the stage hand-off count and the loss/grad parity bit are exact
+    ("BENCH_pipeline", ("schedule", "bubble_steps"),
+     "1F1B bubble steps per optimizer step (obs counter)"),
+    ("BENCH_pipeline", ("schedule", "bubble_matches_analytic"),
+     "bubble counter equals core/mpmd.pipeline_bubble_steps"),
+    ("BENCH_pipeline", ("schedule", "handoffs_per_step"),
+     "activation/cotangent stage hand-offs per step"),
+    ("BENCH_pipeline", ("schedule", "dispatch_digest"),
+     "crc32 of the executed micro-batch dispatch order"),
+    ("BENCH_pipeline", ("schedule", "dispatch_digest_matches_schedule"),
+     "executed order equals schedule_1f1b's dependency-exact order"),
+    ("BENCH_pipeline", ("schedule", "analytic_speedup"),
+     "ideal 1F1B speedup S*M/(M+S-1)"),
+    ("BENCH_pipeline", ("parity", "parity_ok"),
+     "pipelined loss/grad parity with the non-pipelined trainer"),
 )
 
 # Perf-model drift gates: overhead_factor = measured / pure-work seconds
@@ -174,12 +193,13 @@ def main(argv=None) -> int:
     os.makedirs(args.out, exist_ok=True)
     common.RESULTS_DIR = args.out
     from benchmarks import (fabric_throughput, kernels_bench, offload_bench,
-                            rl_throughput, serve_throughput)
+                            pipeline_bench, rl_throughput, serve_throughput)
     serve_throughput.run()
     rl_throughput.run()
     fabric_throughput.run()
     kernels_bench.run()
     offload_bench.run()
+    pipeline_bench.run()
 
     fresh = {}
     for stem in stems:

@@ -17,7 +17,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-PRESETS = ("fsdp_tp", "offload_all", "offload_graph")
+PRESETS = ("fsdp_tp", "offload_all", "offload_graph", "pipeline",
+           "pipeline_fsdp")
 ARCHS = ("qwen2-0.5b", "deepseek-moe-16b")
 # one config per serving-state family: paged / slot / windowed+slot / MLA
 SERVE_ARCHS = ("qwen2-0.5b", "mamba2-370m", "recurrentgemma-2b",
@@ -152,6 +153,112 @@ def check_fabric_api(session) -> int:
         failures += 1
     except PlanError:
         print("OK   fabric validation: fabric+roles double-claim rejected")
+    return failures
+
+
+# the Mpipe public surface: stage partitioner + schedule from core, the
+# trainer entry points, and the plan-level config/error types
+PIPELINE_CORE_EXPORTS = (
+    "StageSlice", "StageAssignment", "PipelineOp", "PipelineSchedule",
+    "num_macro_layers", "even_stage_layers", "partition_stages",
+    "stage_param_tree", "schedule_1f1b", "sequential_dispatch",
+    "dispatch_digest")
+PIPELINE_TRAIN_EXPORTS = ("PipelineTrainer", "train_pipeline")
+
+
+def check_pipeline_api(session) -> int:
+    """Gate: Mpipe exports, both pipeline presets resolve with per-layer
+    stage rows in the report, and the pipeline-leg validation rejects
+    malformed configs (typed PipelinePlanError) including the
+    stage-overclaim and the pipeline+fabric double-claim."""
+    from repro.api import PipelinePlanError, PlanError, plans
+    from repro.configs.base import FabricConfig, PipelineConfig, get_config
+    from repro.core import pipeline as pl
+    from repro.train import pipeline_trainer as pt
+
+    failures = 0
+    missing = [n for n in PIPELINE_CORE_EXPORTS
+               if n not in pl.__all__ or not hasattr(pl, n)]
+    missing += [n for n in PIPELINE_TRAIN_EXPORTS
+                if n not in pt.__all__ or not hasattr(pt, n)]
+    if missing:
+        print(f"FAIL pipeline exports: missing {missing}")
+        failures += 1
+    else:
+        print(f"OK   pipeline exports: "
+              f"{len(PIPELINE_CORE_EXPORTS) + len(PIPELINE_TRAIN_EXPORTS)} "
+              "names")
+
+    for preset in ("pipeline", "pipeline_fsdp"):
+        if preset not in plans.names():
+            print(f"FAIL pipeline preset: {preset} not registered")
+            failures += 1
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    try:
+        report = session.explain(plans.pipeline(stages=2), cfg)
+        rows = report.select("pipeline")
+        n_layers = sum(1 for r in rows if r.path.startswith("layer["))
+        n_sched = sum(1 for r in rows if r.path == "schedule/1f1b")
+        pinned = {r.path for r in rows if "pinned" in r.rule}
+        ok = (n_layers == pl.num_macro_layers(cfg) and n_sched == 1
+              and any(p.startswith("embed") for p in pinned)
+              and any(p.startswith("final_norm") for p in pinned))
+        print(f"{'OK  ' if ok else 'FAIL'} pipeline explain: "
+              f"{n_layers} per-layer stage rows, {n_sched} schedule row, "
+              f"pinned={sorted(pinned)}")
+        if not ok:
+            failures += 1
+    except PlanError as e:
+        print(f"FAIL pipeline explain: {type(e).__name__}: {e}")
+        failures += 1
+
+    bad_cfgs = (
+        PipelineConfig(stages=0),
+        PipelineConfig(micro_batches=0),
+        PipelineConfig(stages=2, stage_layers=(1,)),
+        PipelineConfig(stages=2, stage_layers=(0, 2)),
+        PipelineConfig(stage_mesh=(0, 1)),
+    )
+    rejected = 0
+    for bad in bad_cfgs:
+        try:
+            plans.pipeline().replace(pipeline=bad).validate()
+        except PipelinePlanError:
+            rejected += 1
+    if rejected != len(bad_cfgs):
+        print(f"FAIL pipeline validation: {rejected}/{len(bad_cfgs)} bad "
+              "configs rejected")
+        failures += 1
+    else:
+        print(f"OK   pipeline validation: {rejected}/{len(bad_cfgs)} bad "
+              "configs rejected with PipelinePlanError")
+
+    # stage-overclaim fires at explain/lowering time (needs the config)
+    try:
+        session.explain(plans.pipeline(stages=99), cfg)
+        print("FAIL pipeline validation: stage-overclaim accepted")
+        failures += 1
+    except PipelinePlanError:
+        print("OK   pipeline validation: stage-overclaim rejected at "
+              "explain time")
+
+    try:
+        plans.pipeline(fabric=FabricConfig(replicas=2)).validate()
+        print("FAIL pipeline validation: pipeline+fabric double-claim "
+              "accepted")
+        failures += 1
+    except PlanError:
+        print("OK   pipeline validation: pipeline+fabric double-claim "
+              "rejected")
+    try:
+        plans.pipeline(roles=(("actor", 1),)).validate()
+        print("FAIL pipeline validation: pipeline+roles double-claim "
+              "accepted")
+        failures += 1
+    except PlanError:
+        print("OK   pipeline validation: pipeline+roles double-claim "
+              "rejected")
     return failures
 
 
@@ -436,6 +543,7 @@ def main() -> int:
     failures += check_rl_api(session)
     failures += check_fabric_api(session)
     failures += check_mem_api(session)
+    failures += check_pipeline_api(session)
     for preset in PRESETS:
         for arch in ARCHS:
             cfg = get_config(arch).reduced()
